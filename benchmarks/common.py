@@ -1,0 +1,154 @@
+"""Shared benchmark harness: datasets, index lifecycle, timing, CSV/JSON out.
+
+Datasets are seeded synthetic clustered Gaussians with the PAPER's dims
+(SIFT d=128, GIST d=960, ImageNet d=150) at laptop-reduced N (offline
+container, 1 CPU core); every metric is relative to exact brute force so the
+phenomena match the paper's (see DESIGN.md §6). Scale via REPRO_BENCH_SCALE
+(default 1.0) — the paper-scale run is the same code with scale >= 100.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (HNSWParams, batch_knn, build, count_unreachable,
+                        delete_and_update_batch)
+from repro.data import brute_force_knn, clustered_vectors
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "results")
+
+# paper datasets -> (dim, reduced base N, M); paper Ms are 16/32/64 — scaled
+# down with N to keep build tractable on one CPU core.
+DATASETS = {
+    "sift": {"dim": 128, "n": int(3000 * SCALE), "M": 8},
+    "gist": {"dim": 960, "n": int(1500 * SCALE), "M": 12},
+    "imagenet": {"dim": 150, "n": int(2500 * SCALE), "M": 16},
+    "sift2m": {"dim": 128, "n": int(4000 * SCALE), "M": 8},
+}
+
+VARIANT_LABELS = {
+    "hnsw_ru": "HNSW-RU",
+    "mn_ru_alpha": "MN-RU-alpha",
+    "mn_ru_beta": "MN-RU-beta",
+    "mn_ru_gamma": "MN-RU-gamma",
+    "mn_thn_ru": "MN-THN-RU",
+}
+
+
+def params_for(ds: str) -> HNSWParams:
+    M = DATASETS[ds]["M"]
+    return HNSWParams(M=M, M0=2 * M, num_layers=4, ef_construction=64,
+                      ef_search=64)
+
+
+_INDEX_CACHE = {}
+
+
+def dataset_and_index(ds: str):
+    """(X, params, freshly built index) with in-process caching of the build."""
+    if ds not in _INDEX_CACHE:
+        spec = DATASETS[ds]
+        X = clustered_vectors(spec["n"], spec["dim"], seed=hash(ds) % 1000)
+        params = params_for(ds)
+        t0 = time.time()
+        index = build(params, jnp.asarray(X))
+        index.vectors.block_until_ready()
+        _INDEX_CACHE[ds] = (X, params, index, time.time() - t0)
+    return _INDEX_CACHE[ds][:3]
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jnp_leaves = [x for x in (out if isinstance(out, tuple) else (out,))
+                  if hasattr(x, "block_until_ready")]
+    for x in jnp_leaves:
+        x.block_until_ready()
+    return out, time.time() - t0
+
+
+def recall_at_k(params, index, X_live, labels_live, Q, k=10, ef=None):
+    labels, _, _ = batch_knn(params, index, jnp.asarray(Q), k, ef)
+    gt = labels_live[brute_force_knn(X_live, Q, k)]
+    lab = np.asarray(labels)
+    return float(np.mean([len(set(lab[i]) & set(gt[i])) / k
+                          for i in range(lab.shape[0])]))
+
+
+class ChurnDriver:
+    """Runs the paper's update scenarios over a live-label bookkeeping."""
+
+    def __init__(self, ds: str, variant: str, seed: int = 0):
+        self.X0, self.params, index = dataset_and_index(ds)
+        self.index = index
+        self.variant = variant
+        self.rng = np.random.default_rng(seed)
+        self.dim = self.X0.shape[1]
+        n = self.X0.shape[0]
+        self.live = dict(zip(range(n), range(n)))   # label -> row in X_all
+        self.X_all = [self.X0]
+        self.next_label = n
+        self._round = 0
+
+    def live_matrix(self):
+        Xcat = np.concatenate(self.X_all)
+        labels = np.fromiter(self.live.keys(), dtype=np.int64)
+        return Xcat[[self.live[int(l)] for l in labels]], labels
+
+    def churn(self, n_updates: int, mode: str = "random",
+              new_data: np.ndarray | None = None) -> float:
+        """One iteration of delete+reinsert; returns wall seconds."""
+        labels = np.fromiter(self.live.keys(), dtype=np.int64)
+        if mode == "coverage":
+            lo = (self._round * n_updates) % len(labels)
+            dels = np.sort(labels)[lo:lo + n_updates]
+        else:
+            dels = self.rng.choice(labels, size=min(n_updates, len(labels)),
+                                   replace=False)
+        n_up = len(dels)
+        if new_data is None:
+            # paper full_coverage/random: re-insert the SAME points as new labels
+            Xcat = np.concatenate(self.X_all)
+            newX = Xcat[[self.live[int(d)] for d in dels]].copy()
+        else:
+            newX = new_data[:n_up]
+        news = np.arange(self.next_label, self.next_label + n_up,
+                         dtype=np.int32)
+        self.next_label += n_up
+
+        t0 = time.time()
+        self.index = delete_and_update_batch(
+            self.params, self.index, jnp.asarray(dels.astype(np.int32)),
+            jnp.asarray(newX.astype(np.float32)), jnp.asarray(news),
+            self.variant)
+        self.index.vectors.block_until_ready()
+        dt = time.time() - t0
+
+        base = sum(x.shape[0] for x in self.X_all)
+        for d in dels:
+            del self.live[int(d)]
+        for i, nl in enumerate(news):
+            self.live[int(nl)] = base + i
+        self.X_all.append(newX)
+        self._round += 1
+        return dt
+
+    def unreachable(self):
+        u_ind, u_bfs = count_unreachable(self.index)
+        return int(u_ind), int(u_bfs)
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,57 @@
+"""Paper Figures 10/11: search recall-vs-time AFTER heavy updates.
+
+Paper method: use the whole dataset as queries, K=1, sweep ef; MN-RU-gamma /
+MN-THN-RU dominate HNSW-RU (better recall at equal time) because fewer
+points became unreachable.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import batch_knn
+from .common import ChurnDriver, DATASETS, csv_row, save_result
+
+ITERS = int(os.environ.get("REPRO_FIG10_ITERS", "15"))
+EFS = (8, 16, 32, 64)
+
+
+def run(scenarios=None) -> dict:
+    scenarios = scenarios or [("gist", "random"), ("imagenet", "full_coverage")]
+    results = {}
+    for ds, mode in scenarios:
+        per = max(DATASETS[ds]["n"] // 50, 20)
+        res = {}
+        for variant in ("hnsw_ru", "mn_ru_gamma", "mn_thn_ru"):
+            drv = ChurnDriver(ds, variant, seed=31)
+            for _ in range(ITERS):
+                drv.churn(per, mode="coverage" if mode == "full_coverage"
+                          else "random")
+            # paper protocol: whole live set as queries, K=1 self-recall
+            Xl, ll = drv.live_matrix()
+            Q = jnp.asarray(Xl)
+            curve = []
+            for ef in EFS:
+                labels, _, _ = batch_knn(drv.params, drv.index, Q, 1, ef)
+                labels.block_until_ready()
+                t0 = time.time()
+                labels, _, _ = batch_knn(drv.params, drv.index, Q, 1, ef)
+                labels.block_until_ready()
+                dt = (time.time() - t0) / Q.shape[0] * 1e6
+                rec = float(np.mean(np.asarray(labels)[:, 0] == ll))
+                curve.append({"ef": ef, "us_per_query": dt, "recall@1": rec})
+                csv_row(f"fig10/{ds}/{mode}/{variant}/ef{ef}", dt,
+                        f"recall@1={rec:.4f}")
+            res[variant] = curve
+        results[f"{ds}/{mode}"] = res
+        print(f"# fig10 {ds}/{mode} recall@1 at ef=64: " +
+              str({v: res[v][-1]["recall@1"] for v in res}))
+    save_result("fig10_recall_after_updates", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Paper Figure 12: MN-RU-gamma + backup index vs plain HNSW-RU.
+
+Paper claim: with the tau-triggered backup index, the number of
+SERVING-VISIBLE unreachable points collapses (dualSearch covers the rest).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DualIndexManager, batch_dual_search, bfs_unreachable
+from repro.data import clustered_vectors
+
+from .common import (ChurnDriver, DATASETS, csv_row, dataset_and_index,
+                     recall_at_k, save_result)
+
+ITERS = int(os.environ.get("REPRO_FIG12_ITERS", "20"))
+
+
+def run(ds: str = "gist") -> dict:
+    per = max(DATASETS[ds]["n"] // 50, 20)
+    results = {}
+
+    # arm 1: plain HNSW-RU, no backup
+    drv = ChurnDriver(ds, "hnsw_ru", seed=41)
+    curve_plain = []
+    for it in range(ITERS):
+        drv.churn(per, mode="coverage")
+        if it % 4 == 3:
+            u, _ = drv.unreachable()
+            curve_plain.append({"iter": it + 1, "unreachable": u})
+    results["hnsw_ru"] = curve_plain
+
+    # arm 2: MN-RU-gamma + tau-triggered backup (tau = 4 iterations' worth)
+    drv2 = ChurnDriver(ds, "mn_ru_gamma", seed=41)
+    mgr = DualIndexManager(drv2.params, drv2.index, tau=4 * per,
+                           backup_capacity=max(DATASETS[ds]["n"] // 8, 64))
+    curve_b = []
+    for it in range(ITERS):
+        drv2.index = mgr.index
+        drv2.churn(per, mode="coverage")
+        mgr.index = drv2.index
+        mgr._ru_ops += per
+        if mgr._ru_ops // mgr.tau > mgr._rebuilds:
+            mgr.rebuild()
+        if it % 4 == 3:
+            u_main = int(jnp.sum(bfs_unreachable(mgr.index)))
+            # unreachable points NOT covered by the backup index
+            unreach_mask = np.asarray(bfs_unreachable(mgr.index))
+            unreach_labels = set(
+                np.asarray(mgr.index.labels)[unreach_mask].tolist())
+            backup_labels = set(
+                l for l in np.asarray(mgr.backup.labels).tolist() if l >= 0)
+            uncovered = len(unreach_labels - backup_labels)
+            curve_b.append({"iter": it + 1, "unreachable_main": u_main,
+                            "uncovered_after_dual": uncovered})
+    results["mn_ru_gamma+backup"] = curve_b
+
+    csv_row(f"fig12/{ds}/hnsw_ru_final", curve_plain[-1]["unreachable"])
+    csv_row(f"fig12/{ds}/mnru_backup_final",
+            curve_b[-1]["uncovered_after_dual"],
+            f"main_unreachable={curve_b[-1]['unreachable_main']}")
+    print(f"# fig12 {ds}: HNSW-RU unreachable={curve_plain[-1]['unreachable']}"
+          f" vs MN-RU-gamma+backup uncovered={curve_b[-1]['uncovered_after_dual']}")
+    save_result("fig12_backup", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

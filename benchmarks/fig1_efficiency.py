@@ -1,0 +1,56 @@
+"""Paper Figure 1: query efficiency vs replaced_update efficiency @ recall~0.9.
+
+Paper claim: updates are 5-10x slower than queries at iso-recall (GIST,
+ImageNet); this motivates MN-RU. We report per-op latency for both plus the
+ratio, per dataset.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import batch_knn
+from repro.data import clustered_vectors
+
+from .common import (ChurnDriver, DATASETS, csv_row, dataset_and_index,
+                     recall_at_k, save_result, timed)
+
+
+def run(datasets=("sift", "gist", "imagenet")) -> dict:
+    out = {}
+    for ds in datasets:
+        X, params, index = dataset_and_index(ds)
+        Q = clustered_vectors(100, DATASETS[ds]["dim"],
+                              seed=hash(ds) % 1000 + 1)
+        # pick ef reaching recall ~0.9
+        labels_live = np.arange(X.shape[0])
+        chosen_ef, rec = None, 0.0
+        for ef in (16, 32, 64, 96, 128):
+            rec = recall_at_k(params, index, X, labels_live, Q, 10, ef)
+            chosen_ef = ef
+            if rec >= 0.9:
+                break
+        # warm + time queries
+        batch_knn(params, index, jnp.asarray(Q), 10, chosen_ef)[0].block_until_ready()
+        _, q_dt = timed(lambda: batch_knn(params, index, jnp.asarray(Q), 10,
+                                          chosen_ef)[0])
+        q_us = q_dt / Q.shape[0] * 1e6
+
+        # time replaced_update ops (baseline HNSW-RU, as in the paper's fig)
+        drv = ChurnDriver(ds, "hnsw_ru", seed=1)
+        drv.churn(20)                        # warm compile
+        n_up = 50
+        dt = drv.churn(n_up)
+        u_us = dt / n_up * 1e6
+
+        out[ds] = {"ef": chosen_ef, "recall": rec, "query_us": q_us,
+                   "update_us": u_us, "ratio": u_us / q_us}
+        csv_row(f"fig1/{ds}/query", q_us, f"recall={rec:.3f},ef={chosen_ef}")
+        csv_row(f"fig1/{ds}/replaced_update", u_us,
+                f"update/query_ratio={u_us / q_us:.2f}")
+    save_result("fig1_efficiency", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

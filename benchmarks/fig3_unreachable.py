@@ -1,0 +1,47 @@
+"""Paper Figure 3: unreachable points + recall decay over delete/re-insert
+iterations with native HNSW-RU (5% of the dataset churned per iteration).
+
+Paper claim: unreachable count grows monotonically (3-4% of N after 3000
+iters on SIFT) and recall drops ~3%, unrecoverable by raising ef.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+from repro.data import clustered_vectors
+
+from .common import ChurnDriver, DATASETS, csv_row, recall_at_k, save_result
+
+ITERS = int(os.environ.get("REPRO_FIG3_ITERS", "40"))
+
+
+def run(ds: str = "sift", iters: int = ITERS, frac: float = 0.05) -> dict:
+    drv = ChurnDriver(ds, "hnsw_ru", seed=3)
+    n = DATASETS[ds]["n"]
+    Q = clustered_vectors(100, DATASETS[ds]["dim"], seed=777)
+    per = max(int(n * frac), 1)
+    curve = []
+    for it in range(iters):
+        dt = drv.churn(per, mode="random")
+        if it % 5 == 0 or it == iters - 1:
+            u_ind, u_bfs = drv.unreachable()
+            Xl, ll = drv.live_matrix()
+            rec = recall_at_k(drv.params, drv.index, Xl, ll, Q, 10)
+            curve.append({"iter": it + 1, "unreachable_indeg": u_ind,
+                          "unreachable_bfs": u_bfs, "recall": rec,
+                          "sec_per_iter": dt})
+            csv_row(f"fig3/{ds}/iter{it + 1}", dt * 1e6 / per,
+                    f"unreach={u_ind},recall={rec:.4f}")
+    payload = {"dataset": ds, "n": n, "per_iter": per, "curve": curve}
+    save_result("fig3_unreachable", payload)
+    first, last = curve[0], curve[-1]
+    print(f"# fig3: unreachable {first['unreachable_indeg']} -> "
+          f"{last['unreachable_indeg']} "
+          f"({last['unreachable_indeg'] / n * 100:.2f}% of N), "
+          f"recall {first['recall']:.4f} -> {last['recall']:.4f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

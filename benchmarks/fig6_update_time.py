@@ -1,0 +1,63 @@
+"""Paper Figures 6/7/13a: update time per method x scenario.
+
+Paper claim: the MN-RU family is 2-4x faster than HNSW-RU in every scenario
+(full_coverage, random, new_data).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import VARIANTS
+from repro.data import clustered_vectors
+
+from .common import ChurnDriver, DATASETS, csv_row, save_result
+
+ITERS = int(os.environ.get("REPRO_FIG6_ITERS", "8"))
+
+
+def _scenario(ds: str, mode: str, iters: int, per: int):
+    out = {}
+    for variant in VARIANTS:
+        drv = ChurnDriver(ds, variant, seed=11)
+        times = []
+        if mode == "new_data":
+            pool = clustered_vectors(per * (iters + 1), DATASETS[ds]["dim"],
+                                     seed=999)
+        drv.churn(per)  # warm compile (counts as iteration 0)
+        for it in range(iters):
+            nd = (pool[it * per:(it + 1) * per] if mode == "new_data"
+                  else None)
+            dt = drv.churn(per, mode="coverage" if mode == "full_coverage"
+                           else "random", new_data=nd)
+            times.append(dt)
+        us = float(np.mean(times)) / per * 1e6
+        out[variant] = {"us_per_update": us, "times": times}
+        csv_row(f"fig6/{ds}/{mode}/{variant}", us)
+    base = out["hnsw_ru"]["us_per_update"]
+    for v in VARIANTS:
+        out[v]["speedup_vs_hnsw_ru"] = base / out[v]["us_per_update"]
+    return out
+
+
+def run(scenarios=None) -> dict:
+    scenarios = scenarios or [
+        ("sift", "full_coverage"), ("sift", "random"),
+        ("imagenet", "full_coverage"), ("imagenet", "random"),
+        ("gist", "random"),
+        ("sift2m", "new_data"),
+    ]
+    results = {}
+    for ds, mode in scenarios:
+        per = max(DATASETS[ds]["n"] // 50, 20)
+        results[f"{ds}/{mode}"] = _scenario(ds, mode, ITERS, per)
+        sp = {v: round(results[f'{ds}/{mode}'][v]['speedup_vs_hnsw_ru'], 2)
+              for v in VARIANTS if v != "hnsw_ru"}
+        print(f"# fig6 {ds}/{mode}: speedups vs HNSW-RU {sp}")
+    save_result("fig6_update_time", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

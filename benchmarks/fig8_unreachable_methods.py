@@ -1,0 +1,46 @@
+"""Paper Figures 8/9/13b: growth of unreachable points per method x scenario.
+
+Paper claim: MN-RU-gamma and MN-THN-RU accumulate the fewest unreachable
+points; HNSW-RU reaches 2-4% of N after enough iterations.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import VARIANTS
+from repro.data import clustered_vectors
+
+from .common import ChurnDriver, DATASETS, csv_row, save_result
+
+ITERS = int(os.environ.get("REPRO_FIG8_ITERS", "25"))
+
+
+def run(scenarios=None) -> dict:
+    scenarios = scenarios or [("gist", "random"), ("imagenet", "random"),
+                              ("sift", "full_coverage")]
+    results = {}
+    for ds, mode in scenarios:
+        per = max(DATASETS[ds]["n"] // 50, 20)
+        res = {}
+        for variant in VARIANTS:
+            drv = ChurnDriver(ds, variant, seed=21)
+            curve = []
+            for it in range(ITERS):
+                drv.churn(per, mode="coverage" if mode == "full_coverage"
+                          else "random")
+                if it % 5 == 4 or it == ITERS - 1:
+                    u_ind, u_bfs = drv.unreachable()
+                    curve.append({"iter": it + 1, "indeg": u_ind,
+                                  "bfs": u_bfs})
+            res[variant] = curve
+            csv_row(f"fig8/{ds}/{mode}/{variant}", curve[-1]["indeg"],
+                    f"pct={curve[-1]['indeg'] / DATASETS[ds]['n'] * 100:.2f}%")
+        results[f"{ds}/{mode}"] = res
+        final = {v: res[v][-1]["indeg"] for v in VARIANTS}
+        print(f"# fig8 {ds}/{mode} final unreachable: {final}")
+    save_result("fig8_unreachable_methods", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

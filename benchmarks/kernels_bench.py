@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+NOTE: on this container Pallas executes in interpret mode, so us_per_call is
+a CPU functional-validation number, not TPU performance — the TPU story is
+the BlockSpec arithmetic in the roofline (§Perf). The oracle numbers are the
+XLA-CPU reference.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import embed_bag, l2dist, topk_dist
+from repro.kernels.embed_bag.ref import embed_bag_ref
+from repro.kernels.l2dist.ref import l2dist_ref
+from repro.kernels.topk_dist.ref import topk_dist_ref
+
+from .common import csv_row, save_result
+
+
+def _time(fn, n=5):
+    fn()  # warm/compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn()
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    elif isinstance(out, tuple):
+        out[0].block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    Q = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    Y = jnp.asarray(rng.normal(size=(2048, 128)), jnp.float32)
+    out["l2dist_ref"] = _time(lambda: l2dist_ref(Q, Y))
+    out["l2dist_pallas_interp"] = _time(lambda: l2dist(Q, Y))
+    out["topk_ref"] = _time(lambda: topk_dist_ref(Q, Y, 10))
+    out["topk_pallas_interp"] = _time(lambda: topk_dist(Q, Y, 10))
+
+    tab = jnp.asarray(rng.normal(size=(4096, 32)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, 4096, size=(256, 16)).astype(np.int32))
+    out["embed_bag_ref"] = _time(lambda: embed_bag_ref(tab, idx))
+    out["embed_bag_pallas_interp"] = _time(lambda: embed_bag(tab, idx))
+
+    for k, v in out.items():
+        csv_row(f"kernels/{k}", v)
+    save_result("kernels_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""RecSys retrieval with a REAL-TIME-UPDATABLE catalogue — the paper's
+motivating scenario ("online stores must stay recommendable").
+
+A SASRec user tower produces query embeddings; the item catalogue lives in an
+MN-RU HNSW index. Items are delisted/relisted continuously; retrieval runs
+against the live index and is checked against exact brute-force scoring
+(the `retrieval_cand` cell's two serving modes).
+
+  PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import HNSWParams, batch_knn, build, delete_and_update_batch
+from repro.data import recsys_batch
+from repro.models import recsys
+
+
+def main():
+    cfg = get_smoke_config("sasrec")
+    params = recsys.init_params(cfg, jax.random.PRNGKey(0))
+    items = np.asarray(params["item_embed"])          # [n_items, D]
+    n_items, d = items.shape
+
+    # catalogue index (inner-product retrieval via L2 on normalised vectors)
+    norm = items / (np.linalg.norm(items, axis=1, keepdims=True) + 1e-9)
+    hp = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=64,
+                    ef_search=64)
+    index = build(hp, jnp.asarray(norm))
+    print(f"catalogue index: {n_items} items, d={d}")
+
+    batch = {k: jnp.asarray(v) for k, v in recsys_batch(cfg, 8, 1).items()}
+    u = np.asarray(recsys.user_repr(cfg, params, batch))
+    uq = u / (np.linalg.norm(u, axis=1, keepdims=True) + 1e-9)
+
+    # brute force vs ANN retrieval
+    top, idx = recsys.retrieval_scores(cfg, params, batch, k=10)
+    labels, _, _ = batch_knn(hp, index, jnp.asarray(uq), 10)
+    overlap = np.mean([len(set(np.asarray(labels[i]).tolist())
+                           & set(np.asarray(idx[i]).tolist())) / 10
+                       for i in range(8)])
+    print(f"ANN vs brute-force top-10 overlap: {overlap:.2f} "
+          "(cosine-vs-dot mismatch bounds this; see note)")
+
+    # real-time catalogue churn: delist 20 items, list 20 new ones
+    delist = jnp.arange(20, dtype=jnp.int32)
+    new_items = np.random.default_rng(3).normal(size=(20, d)).astype(np.float32)
+    new_items /= np.linalg.norm(new_items, axis=1, keepdims=True)
+    new_labels = jnp.arange(n_items, n_items + 20, dtype=jnp.int32)
+    index = delete_and_update_batch(hp, index, delist,
+                                    jnp.asarray(new_items), new_labels,
+                                    "mn_ru_gamma")
+    labels2, _, _ = batch_knn(hp, index, jnp.asarray(new_items[:5]), 1)
+    print("newly listed items retrievable:",
+          np.asarray(labels2[:, 0]).tolist())
+    labels3, _, _ = batch_knn(hp, index, jnp.asarray(norm[:5]), 3)
+    gone = [int(l) for row in np.asarray(labels3) for l in row if l in range(20)]
+    print(f"delisted items still surfacing: {len(gone)} (want 0)")
+
+
+if __name__ == "__main__":
+    main()

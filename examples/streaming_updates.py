@@ -1,0 +1,25 @@
+"""End-to-end serving driver (the paper's kind is a serving system):
+
+continuous stream of deletes + inserts against a live index, batched queries
+between rounds, recall tracked against exact ground truth, tau-triggered
+backup index + dualSearch keeping unreachable points servable.
+
+This is a thin preset over ``repro.launch.serve`` — the production driver.
+
+  PYTHONPATH=src python examples/streaming_updates.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [sys.argv[0],
+                "--n", "3000", "--dim", "64", "--queries", "128",
+                "--rounds", "8", "--updates-per-round", "60",
+                "--variant", "mn_ru_gamma", "--backup", "--tau", "240"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

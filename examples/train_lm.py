@@ -1,0 +1,20 @@
+"""Train a reduced LM end-to-end with the production substrate (checkpointing,
+seeded pipeline, AdamW, optional gradient compression) via repro.launch.train.
+
+  PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    sys.argv = [sys.argv[0], "--arch", "stablelm-1.6b", "--steps", "200",
+                "--batch", "4", "--seq", "64",
+                "--ckpt-dir", "/tmp/repro_example_ckpt",
+                "--ckpt-every", "50", "--log-every", "20"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

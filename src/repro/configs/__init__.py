@@ -1,0 +1,50 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from .base import (GNN_SHAPES, GNNConfig, LM_SHAPES, LMConfig, RECSYS_SHAPES,
+                   RecSysConfig, ShapeSpec, shapes_for)
+
+ARCHS = (
+    "granite_moe_3b_a800m",
+    "deepseek_moe_16b",
+    "codeqwen15_7b",
+    "yi_9b",
+    "stablelm_1_6b",
+    "nequip",
+    "wide_deep",
+    "sasrec",
+    "autoint",
+    "dien",
+)
+
+_ALIASES = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "yi-9b": "yi_9b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "wide-deep": "wide_deep",
+}
+
+
+def get_config(arch: str):
+    arch = _ALIASES.get(arch, arch).replace("-", "_")
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; options: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    """Reduced same-family config for CPU smoke tests."""
+    arch = _ALIASES.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE_CONFIG
+
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config", "LMConfig", "GNNConfig",
+           "RecSysConfig", "ShapeSpec", "shapes_for", "LM_SHAPES",
+           "GNN_SHAPES", "RECSYS_SHAPES"]

@@ -1,0 +1,24 @@
+"""Paper core: tensorised HNSW with real-time updates (MN-RU family)."""
+from .index import HNSWIndex, HNSWParams, empty_index, sample_level
+from .hnsw import build, insert, insert_jit
+from .search import batch_knn, greedy_layer, knn_search, search_layer
+from .update import (VARIANTS, delete_and_update_batch, first_deleted_slot,
+                     first_free_slot, mark_delete, mark_delete_jit,
+                     num_deleted, replaced_update, replaced_update_jit,
+                     slot_of_label)
+from .reach import (bfs_reachable, bfs_unreachable, count_unreachable,
+                    indegree, indegree_unreachable)
+from .backup import (DualIndexManager, batch_dual_search, dual_search,
+                     rebuild_backup)
+
+__all__ = [
+    "HNSWIndex", "HNSWParams", "empty_index", "sample_level",
+    "build", "insert", "insert_jit",
+    "batch_knn", "greedy_layer", "knn_search", "search_layer",
+    "VARIANTS", "delete_and_update_batch", "first_deleted_slot",
+    "first_free_slot", "mark_delete", "mark_delete_jit", "num_deleted",
+    "replaced_update", "replaced_update_jit", "slot_of_label",
+    "bfs_reachable", "bfs_unreachable", "count_unreachable", "indegree",
+    "indegree_unreachable",
+    "DualIndexManager", "batch_dual_search", "dual_search", "rebuild_backup",
+]

@@ -1,0 +1,131 @@
+"""Backup index + dualSearch (paper §IV-A/B, Algorithm 1).
+
+Every ``tau`` replaced_update operations the index is swept for unreachable
+points and a dedicated small HNSW ("backup index") is rebuilt over them.
+Queries then run against BOTH indexes and merge by distance — unreachable
+points stay servable without a full main-index rebuild.
+
+The paper sweeps reachability with a K=|P| search; we use the BFS fix-point
+(`reach.bfs_unreachable`) — a deterministic superset of search reachability
+(DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import INF, INVALID
+from .index import HNSWIndex, HNSWParams, empty_index
+from .hnsw import insert
+from .reach import bfs_unreachable
+from .search import knn_search
+
+
+@partial(jax.jit, static_argnames=("params", "capacity"))
+def rebuild_backup(params: HNSWParams, index: HNSWIndex, capacity: int,
+                   seed: jax.Array) -> HNSWIndex:
+    """Build a fresh backup index over (up to ``capacity``) unreachable points."""
+    mask = bfs_unreachable(index)
+    N = index.capacity
+    # unreachable slots first, stable by slot id
+    order = jnp.argsort(jnp.where(mask, jnp.arange(N), N))
+    slots = order[:capacity]
+    valid = mask[slots]
+    n_valid = jnp.sum(valid).astype(jnp.int32)
+    vecs = index.vectors[slots]
+    labels = jnp.where(valid, index.labels[slots], INVALID)
+
+    backup = empty_index(params, capacity, index.dim, 0,
+                         dtype=index.vectors.dtype)
+    backup = dataclasses.replace(backup, rng=jax.random.PRNGKey(0) + seed)
+
+    def body(i, ix):
+        def do(ix):
+            return insert(params, ix, vecs[i], i, labels[i])
+        return jax.lax.cond(i < n_valid, do, lambda ix: ix, ix)
+
+    return jax.lax.fori_loop(0, capacity, body, backup)
+
+
+@partial(jax.jit, static_argnames=("params_main", "params_backup", "k", "ef"))
+def dual_search(params_main: HNSWParams, main: HNSWIndex,
+                params_backup: HNSWParams, backup: HNSWIndex,
+                q: jax.Array, k: int, ef: int | None = None):
+    """Algorithm 1 (dualSearch): query both indexes, merge by distance."""
+    lm, im, dm = knn_search(params_main, main, q, k, ef)
+    lb, ib, db = knn_search(params_backup, backup, q, k, ef)
+    labels = jnp.concatenate([lm, lb])
+    dists = jnp.concatenate([dm, db])
+    # de-duplicate labels (a point can be in both indexes between rebuilds)
+    order = jnp.argsort(labels)
+    sl = labels[order]
+    dup = jnp.concatenate([jnp.array([False]),
+                           (sl[1:] == sl[:-1]) & (sl[1:] >= 0)])
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    dists = jnp.where(dup[inv] | (labels < 0), INF, dists)
+    o = jnp.argsort(dists)
+    return labels[o][:k], dists[o][:k]
+
+
+@partial(jax.jit, static_argnames=("params_main", "params_backup", "k", "ef"))
+def batch_dual_search(params_main: HNSWParams, main: HNSWIndex,
+                      params_backup: HNSWParams, backup: HNSWIndex,
+                      Q: jax.Array, k: int, ef: int | None = None):
+    return jax.vmap(lambda q: dual_search(params_main, main, params_backup,
+                                          backup, q, k, ef))(Q)
+
+
+class DualIndexManager:
+    """Host-side orchestration of main index + tau-triggered backup rebuilds.
+
+    Mirrors the paper's upper-level application layer (Fig. 4): the counter of
+    replaced_update operations triggers a backup rebuild every ``tau`` ops.
+    """
+
+    def __init__(self, params: HNSWParams, index: HNSWIndex, tau: int,
+                 backup_capacity: int,
+                 backup_params: HNSWParams | None = None):
+        self.params = params
+        self.index = index
+        self.tau = tau
+        self.backup_params = backup_params or params
+        self.backup_capacity = backup_capacity
+        self.backup = empty_index(self.backup_params, backup_capacity,
+                                  index.dim, 1, dtype=index.vectors.dtype)
+        self._ru_ops = 0
+        self._rebuilds = 0
+
+    def mark_delete(self, label):
+        from .update import mark_delete_jit
+        self.index = mark_delete_jit(self.index, jnp.asarray(label, jnp.int32))
+
+    def replaced_update(self, x, label, variant: str = "mn_ru_gamma"):
+        from .update import replaced_update_jit
+        self.index = replaced_update_jit(self.params, self.index, x,
+                                         jnp.asarray(label, jnp.int32), variant)
+        self._ru_ops += 1
+        if self._ru_ops % self.tau == 0:
+            self.rebuild()
+
+    def replaced_update_batch(self, del_labels, new_X, new_labels,
+                              variant: str = "mn_ru_gamma"):
+        from .update import delete_and_update_batch
+        self.index = delete_and_update_batch(self.params, self.index,
+                                             del_labels, new_X, new_labels,
+                                             variant)
+        self._ru_ops += int(new_labels.shape[0])
+        if self._ru_ops // self.tau > self._rebuilds:
+            self.rebuild()
+
+    def rebuild(self):
+        self.backup = rebuild_backup(self.backup_params, self.index,
+                                     self.backup_capacity,
+                                     jnp.uint32(self._rebuilds + 1))
+        self._rebuilds += 1
+
+    def search(self, Q, k: int, ef: int | None = None):
+        return batch_dual_search(self.params, self.index, self.backup_params,
+                                 self.backup, Q, k, ef)

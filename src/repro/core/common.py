@@ -1,0 +1,64 @@
+"""Shared numeric utilities for the tensorised HNSW core.
+
+Everything here is pure jnp, shape-static, and jit/vmap friendly. Distances
+are squared L2 throughout (the paper's datasets are L2; squared preserves
+ordering and saves the sqrt).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+INVALID = jnp.int32(-1)
+
+
+def sqdist_point(q: jax.Array, X: jax.Array) -> jax.Array:
+    """Squared L2 distance from one query ``q[d]`` to rows of ``X[..., d]``."""
+    diff = X - q
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pairwise_sqdist(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Pairwise squared L2 ``[n, m]`` between ``A[n, d]`` and ``B[m, d]``.
+
+    Matmul (MXU) form: ||a||^2 + ||b||^2 - 2 a.b, clamped at 0 for numerics.
+    """
+    na = jnp.sum(A * A, axis=-1, keepdims=True)          # [n, 1]
+    nb = jnp.sum(B * B, axis=-1, keepdims=True).T        # [1, m]
+    d = na + nb - 2.0 * (A @ B.T)
+    return jnp.maximum(d, 0.0)
+
+
+def masked_gather_rows(X: jax.Array, ids: jax.Array) -> jax.Array:
+    """Gather rows ``X[ids]`` treating negative ids as index 0 (caller masks)."""
+    return X[jnp.clip(ids, 0, X.shape[0] - 1)]
+
+
+def dedup_ids(ids: jax.Array, dists: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Invalidate duplicate ids in a flat candidate list.
+
+    Keeps the first occurrence in id-sorted order; duplicates become
+    ``(-1, INF)``. Invalid (-1) entries stay invalid.
+    """
+    order = jnp.argsort(ids)
+    s = ids[order]
+    dup_sorted = jnp.concatenate([jnp.array([False]), (s[1:] == s[:-1]) & (s[1:] >= 0)])
+    # unsort the dup mask back to original positions
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    dup = dup_sorted[inv]
+    ids = jnp.where(dup, INVALID, ids)
+    dists = jnp.where(dup, INF, dists)
+    return ids, dists
+
+
+def topk_by_distance(ids: jax.Array, dists: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Sort candidates ascending by distance, return the first ``k``."""
+    order = jnp.argsort(dists)
+    return ids[order][:k], dists[order][:k]
+
+
+def scatter_or(dst: jax.Array, idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """``dst[idx] |= valid`` for a bool array, dropping invalid indices."""
+    safe = jnp.where(valid, idx, dst.shape[0])  # OOB index -> dropped
+    return dst.at[safe].set(True, mode="drop")

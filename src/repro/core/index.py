@@ -1,0 +1,95 @@
+"""The HNSW index as a JAX pytree + its static hyper-parameters.
+
+The whole index is a flat-tensor pytree: it jit-compiles, vmaps, shards with
+NamedSharding, and checkpoints like model state. ``-1`` marks empty neighbour
+slots / free point slots.
+
+Layout:
+  vectors   f32[N, d]      point payloads (slot-indexed)
+  labels    i32[N]         external label per slot (-1 = free)
+  levels    i32[N]         max layer of the point (-1 = free slot)
+  neighbors i32[L, N, M0]  adjacency; layer 0 uses all M0 slots, layers >0
+                           use only the first M slots (rest stay -1)
+  deleted   bool[N]        markDelete flags (slots still traversable)
+  entry     i32[]          entry point slot id
+  max_layer i32[]          current top layer
+  count     i32[]          number of live (non-free) slots
+  rng       PRNGKey        level-sampling state
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HNSWParams:
+    """Static (hashable) hyper-parameters; safe as a jit static arg."""
+    M: int = 8                 # max degree, layers > 0
+    M0: int = 16               # max degree, layer 0 (conventionally 2M)
+    num_layers: int = 4        # static layer count L
+    ef_construction: int = 64
+    ef_search: int = 32
+    alpha: float = 1.0         # alpha-RNG pruning parameter
+    max_search_steps: int = 0  # 0 => 4*ef + 32
+
+    def m_for_layer(self, layer: int) -> int:
+        return self.M0 if layer == 0 else self.M
+
+    def steps_for(self, ef: int) -> int:
+        return self.max_search_steps if self.max_search_steps > 0 else 4 * ef + 32
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["vectors", "labels", "levels", "neighbors", "deleted",
+                 "entry", "max_layer", "count", "rng"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class HNSWIndex:
+    vectors: jax.Array
+    labels: jax.Array
+    levels: jax.Array
+    neighbors: jax.Array
+    deleted: jax.Array
+    entry: jax.Array
+    max_layer: jax.Array
+    count: jax.Array
+    rng: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+
+def empty_index(params: HNSWParams, capacity: int, dim: int,
+                seed: int | jax.Array = 0, dtype=jnp.float32) -> HNSWIndex:
+    rng = jax.random.PRNGKey(seed) if isinstance(seed, (int, np.integer)) else seed
+    return HNSWIndex(
+        vectors=jnp.zeros((capacity, dim), dtype),
+        labels=jnp.full((capacity,), -1, jnp.int32),
+        levels=jnp.full((capacity,), -1, jnp.int32),
+        neighbors=jnp.full((params.num_layers, capacity, params.M0), -1, jnp.int32),
+        deleted=jnp.zeros((capacity,), jnp.bool_),
+        entry=jnp.int32(-1),
+        max_layer=jnp.int32(-1),
+        count=jnp.int32(0),
+        rng=rng,
+    )
+
+
+def sample_level(key: jax.Array, params: HNSWParams) -> jax.Array:
+    """HNSW level sampling: floor(-ln(U) * 1/ln(M)), capped at L-1."""
+    mL = 1.0 / jnp.log(jnp.float32(params.M))
+    e = jax.random.exponential(key, dtype=jnp.float32)  # = -ln(U)
+    lvl = jnp.floor(e * mL).astype(jnp.int32)
+    return jnp.clip(lvl, 0, params.num_layers - 1)

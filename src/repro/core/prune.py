@@ -1,0 +1,85 @@
+"""Neighbour-selection heuristics: HNSW Algorithm 4 generalised with alpha-RNG.
+
+The alpha-RNG rule (DiskANN RobustPrune, used by the paper with alpha in
+{1.0, 1.1}): scanning candidates in ascending distance-to-query order, keep
+candidate ``c`` iff for every already-selected ``r``:
+
+    alpha * d(r, c) > d(q, c)
+
+With alpha = 1 this is exactly the original HNSW select-neighbours heuristic.
+
+Implementation: a ``while_loop`` over sorted candidates that terminates as
+soon as ``m_out`` are selected (or candidates run out), computing dominance
+distances LAZILY against the <= m_out selected vectors only — mirroring
+hnswlib's lazy evaluation. Worst case O(C * m_out * d) instead of the
+O(C^2 * d) pairwise matrix, and typically far less via the early exit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import INF, INVALID, dedup_ids
+
+
+def select_neighbors(
+    q: jax.Array,             # [d] query vector (used only via cand_dists)
+    cand_ids: jax.Array,      # [C] int32, -1 = invalid
+    cand_vecs: jax.Array,     # [C, d] candidate vectors (garbage ok if invalid)
+    cand_dists: jax.Array,    # [C] f32 distance(q, candidate), INF = invalid
+    m_out: int,
+    alpha: float = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Select up to ``m_out`` neighbours by the alpha-RNG rule.
+
+    Returns ``(ids[m_out], dists[m_out])`` padded with (-1, INF), sorted by
+    ascending distance to the query.
+    """
+    C, d = cand_vecs.shape
+    cand_ids, cand_dists = dedup_ids(cand_ids, cand_dists)
+    order = jnp.argsort(cand_dists)
+    ids = cand_ids[order]
+    dq = cand_dists[order]
+    vecs = cand_vecs[order]
+
+    def cond(state):
+        i, selected, sel_vecs, count = state
+        # stop when filled, exhausted, or remaining candidates are invalid
+        return (i < C) & (count < m_out) & (dq[jnp.minimum(i, C - 1)] < INF)
+
+    def body(state):
+        i, selected, sel_vecs, count = state
+        v = vecs[i]
+        diff = sel_vecs - v                                   # [m_out, d]
+        dd = jnp.sum(diff * diff, axis=-1)                    # d(r, c_i)
+        active = jnp.arange(m_out) < count
+        dom = jnp.any(active & (alpha * dd <= dq[i]))
+        keep = (~dom) & (dq[i] < INF)
+        sel_vecs = jax.lax.cond(
+            keep,
+            lambda sv: jax.lax.dynamic_update_slice(sv, v[None], (count, 0)),
+            lambda sv: sv, sel_vecs)
+        selected = selected.at[i].set(keep)
+        return i + 1, selected, sel_vecs, count + keep.astype(jnp.int32)
+
+    init = (jnp.int32(0), jnp.zeros((C,), jnp.bool_),
+            jnp.zeros((m_out, d), vecs.dtype), jnp.int32(0))
+    _, selected, _, _ = jax.lax.while_loop(cond, body, init)
+
+    key = jnp.where(selected, dq, INF)
+    out_order = jnp.argsort(key)
+    out_ids = jnp.where(key[out_order] < INF, ids[out_order], INVALID)[:m_out]
+    out_d = key[out_order][:m_out]
+    return out_ids, out_d
+
+
+def alpha_rng_select(
+    cand_ids: jax.Array,      # [C] int32, -1 = invalid
+    cand_dists: jax.Array,    # [C] f32 distance to the query point
+    cand_vecs: jax.Array,     # [C, d] candidate vectors
+    m_out: int,
+    alpha: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Back-compat wrapper (vector-based since the lazy-scan rewrite)."""
+    return select_neighbors(None, cand_ids, cand_vecs, cand_dists, m_out,
+                            alpha)

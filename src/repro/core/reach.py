@@ -1,0 +1,90 @@
+"""Unreachable-point detection.
+
+Two criteria, both jit-able:
+
+  * ``indegree_unreachable`` — the paper's Definition 1 verbatim: a live point
+    with zero in-edges on every layer (and not the entry point). Computed as a
+    scatter-add of the adjacency (segment-count), O(L*N*M0).
+  * ``bfs_unreachable`` — graph-search reachability: BFS fix-point from the
+    entry point descending through all layers (a superset of what HNSW search
+    can visit). This replaces the paper's K=|P| search sweep with a
+    deterministic, collective-friendly propagation (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .index import HNSWIndex, HNSWParams
+
+
+def _live(index: HNSWIndex) -> jax.Array:
+    return (index.levels >= 0) & ~index.deleted
+
+
+@jax.jit
+def indegree(index: HNSWIndex) -> jax.Array:
+    """Total in-edge count per slot across all layers (from any valid slot)."""
+    L, N, M0 = index.neighbors.shape
+    src_exists = (index.levels >= 0)
+    counts = jnp.zeros((N,), jnp.int32)
+    for layer in range(L):
+        nbrs = index.neighbors[layer]                      # [N, M0]
+        valid = (nbrs >= 0) & src_exists[:, None]
+        flat = jnp.where(valid, nbrs, N).reshape(-1)
+        counts = counts.at[flat].add(1, mode="drop")
+    return counts
+
+
+@jax.jit
+def indegree_unreachable(index: HNSWIndex) -> jax.Array:
+    """bool[N]: live, not entry, zero in-edges on every layer (Definition 1)."""
+    deg = indegree(index)
+    unreach = _live(index) & (deg == 0)
+    return unreach.at[jnp.clip(index.entry, 0)].set(False)
+
+
+def _bfs_layer(nbrs_layer: jax.Array, reached: jax.Array) -> jax.Array:
+    """Fix-point closure of ``reached`` under one layer's out-edges."""
+    N, M0 = nbrs_layer.shape
+
+    def cond(state):
+        reached, changed = state
+        return changed
+
+    def body(state):
+        reached, _ = state
+        src = jnp.repeat(reached, M0)
+        flat = nbrs_layer.reshape(-1)
+        upd_idx = jnp.where(src & (flat >= 0), flat, N)
+        new = reached.at[upd_idx].set(True, mode="drop")
+        return new, jnp.any(new != reached)
+
+    reached, _ = jax.lax.while_loop(cond, body, (reached, jnp.bool_(True)))
+    return reached
+
+
+@jax.jit
+def bfs_reachable(index: HNSWIndex) -> jax.Array:
+    """bool[N]: slots visitable by descending search from the entry point."""
+    L, N, M0 = index.neighbors.shape
+    reached = jnp.zeros((N,), jnp.bool_).at[jnp.clip(index.entry, 0)].set(
+        index.entry >= 0)
+    for layer in range(L - 1, -1, -1):
+        reached = _bfs_layer(index.neighbors[layer], reached)
+    return reached
+
+
+@jax.jit
+def bfs_unreachable(index: HNSWIndex) -> jax.Array:
+    """bool[N]: live points that descending graph search can never visit."""
+    return _live(index) & ~bfs_reachable(index)
+
+
+@jax.jit
+def count_unreachable(index: HNSWIndex) -> jax.Array:
+    """(definition1_count, bfs_count) — the paper reports Definition 1."""
+    return (jnp.sum(indegree_unreachable(index)),
+            jnp.sum(bfs_unreachable(index)))

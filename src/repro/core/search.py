@@ -1,0 +1,143 @@
+"""Layered beam search over the tensorised HNSW graph.
+
+``search_layer`` is the paper's K-NN-SEARCH building block (HNSW Algorithm 2)
+re-thought for TPU: a fixed-size sorted beam replaces the two heaps, neighbour
+expansion is a dense ``[M0, d]`` gather + contraction, and the candidate/result
+split is implicit — any unexpanded entry inside the sorted top-ef beam is a
+candidate; entries pushed past ef by the merge-sort are exactly the ones the
+classical algorithm would discard (`c > f` break).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import INF, INVALID, sqdist_point
+from .index import HNSWIndex, HNSWParams
+
+
+def greedy_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
+                 ep: jax.Array, layer: int) -> jax.Array:
+    """ef=1 greedy descent within one layer; returns the improved entry point."""
+    nbrs_l = index.neighbors[layer]
+
+    def cond(state):
+        _, _, improved = state
+        return improved
+
+    def body(state):
+        cur, cur_d, _ = state
+        nbrs = nbrs_l[cur]
+        valid = nbrs >= 0
+        nv = index.vectors[jnp.clip(nbrs, 0)]
+        nd = jnp.where(valid, sqdist_point(q, nv), INF)
+        j = jnp.argmin(nd)
+        best_d = nd[j]
+        improved = best_d < cur_d
+        cur = jnp.where(improved, jnp.clip(nbrs, 0)[j], cur)
+        cur_d = jnp.minimum(best_d, cur_d)
+        return cur, cur_d, improved
+
+    d0 = sqdist_point(q, index.vectors[jnp.clip(ep, 0)])
+    cur, _, _ = jax.lax.while_loop(cond, body, (jnp.clip(ep, 0), d0, jnp.bool_(True)))
+    return cur
+
+
+def search_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
+                 ep: jax.Array, layer: int, ef: int,
+                 max_steps: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Beam search at ``layer``; returns ``(ids[ef], dists[ef])`` sorted asc.
+
+    Traverses through deleted points (hnswlib semantics) — the caller filters
+    deleted ids out of returned results.
+    """
+    N = index.capacity
+    M0 = params.M0
+    steps_cap = max_steps if max_steps is not None else params.steps_for(ef)
+    nbrs_l = index.neighbors[layer]
+
+    ep = jnp.clip(ep, 0)
+    d0 = sqdist_point(q, index.vectors[ep])
+    dists = jnp.full((ef,), INF).at[0].set(d0)
+    ids = jnp.full((ef,), INVALID, jnp.int32).at[0].set(ep)
+    expanded = jnp.zeros((ef,), jnp.bool_)
+    visited = jnp.zeros((N,), jnp.bool_).at[ep].set(True)
+
+    def frontier(dists, ids, expanded):
+        return jnp.where(expanded | (ids < 0), INF, dists)
+
+    def cond(state):
+        dists, ids, expanded, visited, steps = state
+        return (jnp.min(frontier(dists, ids, expanded)) < INF) & (steps < steps_cap)
+
+    def body(state):
+        dists, ids, expanded, visited, steps = state
+        f = frontier(dists, ids, expanded)
+        i = jnp.argmin(f)
+        cur = jnp.clip(ids[i], 0)
+        expanded = expanded.at[i].set(True)
+
+        nbrs = nbrs_l[cur]                            # [M0]
+        valid = nbrs >= 0
+        nc = jnp.clip(nbrs, 0)
+        fresh = valid & ~visited[nc]
+        # mark visited (drop invalid via OOB index)
+        visited = visited.at[jnp.where(valid, nc, N)].set(True, mode="drop")
+
+        nv = index.vectors[nc]                        # [M0, d]
+        nd = jnp.where(fresh, sqdist_point(q, nv), INF)
+
+        all_d = jnp.concatenate([dists, nd])
+        all_i = jnp.concatenate([ids, jnp.where(fresh, nc, INVALID)])
+        all_e = jnp.concatenate([expanded, jnp.zeros((M0,), jnp.bool_)])
+        order = jnp.argsort(all_d)
+        return (all_d[order][:ef], all_i[order][:ef], all_e[order][:ef],
+                visited, steps + 1)
+
+    dists, ids, expanded, visited, _ = jax.lax.while_loop(
+        cond, body, (dists, ids, expanded, visited, jnp.int32(0)))
+    return ids, dists
+
+
+def _descend(params: HNSWParams, index: HNSWIndex, q: jax.Array,
+             down_to_layer: jax.Array) -> jax.Array:
+    """Greedy descent from the top layer to (but not including) ``down_to_layer``."""
+    ep = jnp.clip(index.entry, 0)
+    for layer in range(params.num_layers - 1, 0, -1):
+        active = (layer <= index.max_layer) & (layer > down_to_layer)
+        ep = jax.lax.cond(
+            active,
+            lambda ep: greedy_layer(params, index, q, ep, layer),
+            lambda ep: ep,
+            ep,
+        )
+    return ep
+
+
+def knn_search(params: HNSWParams, index: HNSWIndex, q: jax.Array,
+               k: int, ef: int | None = None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full HNSW k-NN query. Returns ``(labels[k], slot_ids[k], dists[k])``.
+
+    Deleted and free slots are excluded from results (but traversed through).
+    """
+    ef = ef or params.ef_search
+    ef = max(ef, k)
+    ep = _descend(params, index, q, jnp.int32(0))
+    ids, dists = search_layer(params, index, q, ep, 0, ef)
+    ok = (ids >= 0) & ~index.deleted[jnp.clip(ids, 0)] & (index.levels[jnp.clip(ids, 0)] >= 0)
+    dists = jnp.where(ok, dists, INF)
+    ids = jnp.where(ok, ids, INVALID)
+    order = jnp.argsort(dists)
+    ids_k = ids[order][:k]
+    dists_k = dists[order][:k]
+    labels_k = jnp.where(ids_k >= 0, index.labels[jnp.clip(ids_k, 0)], INVALID)
+    return labels_k, ids_k, dists_k
+
+
+@partial(jax.jit, static_argnames=("params", "k", "ef"))
+def batch_knn(params: HNSWParams, index: HNSWIndex, Q: jax.Array,
+              k: int, ef: int | None = None):
+    """vmapped batched query: ``Q[b, d] -> (labels[b,k], ids[b,k], dists[b,k])``."""
+    return jax.vmap(lambda q: knn_search(params, index, q, k, ef))(Q)

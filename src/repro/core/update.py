@@ -1,0 +1,289 @@
+"""Real-time update algorithms: markDelete + replaced_update family.
+
+This module is the paper's primary contribution:
+
+  * ``hnsw_ru``     — baseline hnswlib ``replaced_update``: repair EVERY one-hop
+                      neighbour of the deleted point from the shared one-hop ∪
+                      two-hop candidate pool (O(M^3)/layer).
+  * ``mn_ru_alpha`` — repair only MUTUAL neighbours, same shared two-hop pool.
+  * ``mn_ru_beta``  — mutual neighbours, per-vertex pool N(v) ∪ N(d) ∪ {new},
+                      alpha = 1.0 (paper Algorithm 2, O(M^2)/layer).
+  * ``mn_ru_gamma`` — beta with alpha-RNG alpha = 1.1.
+  * ``mn_thn_ru``   — gamma + also repair two-hop vertices that point at d.
+
+All variants finish with the layer-inheriting re-insert (paper Algorithm 3).
+
+TPU adaptation: the shared two-hop candidate pool means ONE
+``[C, d] @ [d, C]`` MXU matmul amortises the pairwise distances across all
+repairs; per-vertex pools are vmapped. No per-pair distance calls anywhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import INF, INVALID, dedup_ids, pairwise_sqdist, sqdist_point
+from .index import HNSWIndex, HNSWParams
+from .hnsw import _pad_row, add_reverse_edges, insert
+from .prune import alpha_rng_select, select_neighbors
+from .search import greedy_layer, search_layer
+
+VARIANTS = ("hnsw_ru", "mn_ru_alpha", "mn_ru_beta", "mn_ru_gamma", "mn_thn_ru")
+
+_VARIANT_CFG = {
+    #            repair set,         candidate pool,  repair alpha
+    "hnsw_ru":     ("one_hop",        "two_hop",       1.0),
+    "mn_ru_alpha": ("mutual",         "two_hop",       1.0),
+    "mn_ru_beta":  ("mutual",         "per_vertex",    1.0),
+    "mn_ru_gamma": ("mutual",         "per_vertex",    1.1),
+    "mn_thn_ru":   ("mutual_thn",     "per_vertex",    1.1),
+}
+
+
+def slot_of_label(index: HNSWIndex, label: jax.Array) -> jax.Array:
+    """Return the slot holding ``label`` (-1 if absent). O(N) masked scan."""
+    hits = (index.labels == label) & (index.levels >= 0)
+    slot = jnp.argmax(hits)
+    return jnp.where(hits[slot], slot, INVALID).astype(jnp.int32)
+
+
+def mark_delete(index: HNSWIndex, label: jax.Array) -> HNSWIndex:
+    """Paper 'Deletion': flag the point; it stays traversable until replaced."""
+    slot = slot_of_label(index, jnp.asarray(label, jnp.int32))
+    deleted = index.deleted.at[jnp.where(slot >= 0, slot, index.capacity)].set(
+        True, mode="drop")
+    return HNSWIndex(index.vectors, index.labels, index.levels, index.neighbors,
+                     deleted, index.entry, index.max_layer, index.count,
+                     index.rng)
+
+
+@jax.jit
+def mark_delete_jit(index: HNSWIndex, label: jax.Array) -> HNSWIndex:
+    return mark_delete(index, label)
+
+
+def first_deleted_slot(index: HNSWIndex) -> jax.Array:
+    live_deleted = index.deleted & (index.levels >= 0)
+    cand = jnp.where(live_deleted, jnp.arange(index.capacity), index.capacity)
+    m = jnp.min(cand)
+    return jnp.where(m == index.capacity, INVALID, m).astype(jnp.int32)
+
+
+def first_free_slot(index: HNSWIndex) -> jax.Array:
+    free = index.levels < 0
+    cand = jnp.where(free, jnp.arange(index.capacity), index.capacity)
+    m = jnp.min(cand)
+    return jnp.where(m == index.capacity, INVALID, m).astype(jnp.int32)
+
+
+def num_deleted(index: HNSWIndex) -> jax.Array:
+    return jnp.sum(index.deleted & (index.levels >= 0))
+
+
+# ---------------------------------------------------------------------------
+# repair phase
+# ---------------------------------------------------------------------------
+
+def _repair_layer(params: HNSWParams, nbrs: jax.Array, vectors: jax.Array,
+                  deleted: jax.Array, pid: jax.Array, layer: int,
+                  variant: str) -> jax.Array:
+    """Repair the neighbourhood around replaced slot ``pid`` at one layer.
+
+    ``nbrs``: full [L, N, M0] adjacency (returns updated copy).
+    ``vectors[pid]`` already holds the NEW point's vector; edges touching
+    ``pid`` therefore reference the newly inserted point ("label" in Alg. 2).
+    """
+    repair_kind, pool_kind, r_alpha = _VARIANT_CFG[variant]
+    M0 = params.M0
+    m_l = params.m_for_layer(layer)
+    N = vectors.shape[0]
+    layer_nbrs = nbrs[layer]
+
+    N1 = layer_nbrs[pid]                                  # [M0] one-hop of d
+    n1c = jnp.clip(N1, 0)
+    valid1 = (N1 >= 0) & ~deleted[n1c]
+    rows1 = layer_nbrs[n1c]                               # [M0, M0]
+    mutual = jnp.any(rows1 == pid, axis=1) & valid1       # v with edge v->d
+
+    # --- repair set P ----------------------------------------------------
+    if repair_kind == "one_hop":
+        p_ids = jnp.where(valid1, N1, INVALID)
+    elif repair_kind == "mutual":
+        p_ids = jnp.where(mutual, N1, INVALID)
+    elif repair_kind == "mutual_thn":
+        two_hop = rows1.reshape(-1)                       # [M0*M0]
+        thc = jnp.clip(two_hop, 0)
+        th_valid = (two_hop >= 0) & ~deleted[thc]
+        th_valid &= jnp.repeat(valid1, M0)                # parent edge valid
+        th_points_at_d = jnp.any(layer_nbrs[thc] == pid, axis=1)
+        th_ids = jnp.where(th_valid & th_points_at_d, two_hop, INVALID)
+        # compact to a bounded repair budget (3*M0): the mutual two-hop set
+        # is tiny in practice, but vmapping all M0^2 masked slots makes the
+        # batched dominance scan pay for every lane (DESIGN.md §7)
+        th_ids, _ = dedup_ids(th_ids, jnp.where(th_ids >= 0, 0.0, INF))
+        order = jnp.argsort(th_ids < 0, stable=True)      # valid first
+        th_ids = th_ids[order][:3 * M0]
+        p_ids = jnp.concatenate([jnp.where(mutual, N1, INVALID), th_ids])
+    else:
+        raise ValueError(repair_kind)
+
+    # --- candidate pools + per-vertex prune -------------------------------
+    if pool_kind == "two_hop":
+        two_hop = rows1.reshape(-1)
+        th_valid = (two_hop >= 0) & jnp.repeat(valid1, M0)
+        pool = jnp.concatenate([jnp.where(valid1, N1, INVALID),
+                                jnp.where(th_valid, two_hop, INVALID),
+                                jnp.array([pid], jnp.int32)])          # [C]
+        poolc = jnp.clip(pool, 0)
+        pool_ok = (pool >= 0) & ~deleted[poolc]
+        pool_vecs = vectors[poolc]                                      # [C, d]
+
+        def repair_one(v):
+            vc = jnp.clip(v, 0)
+            dq = sqdist_point(vectors[vc], pool_vecs)
+            ok = pool_ok & (pool != v)
+            dq = jnp.where(ok, dq, INF)
+            ids = jnp.where(ok, pool, INVALID)
+            sel, _ = alpha_rng_select(ids, dq, pool_vecs, m_l, r_alpha)
+            new_row = _pad_row(sel, M0)
+            return jnp.where(v >= 0, new_row, layer_nbrs[vc]), vc
+    else:  # per_vertex: C(v) = N(v) ∪ N(d) ∪ {new}
+        def repair_one(v):
+            vc = jnp.clip(v, 0)
+            own = layer_nbrs[vc]                                       # [M0]
+            pool = jnp.concatenate([own, N1, jnp.array([pid], jnp.int32)])
+            poolc = jnp.clip(pool, 0)
+            ok = (pool >= 0) & ~deleted[poolc] & (pool != v)
+            pool_vecs = vectors[poolc]
+            dq = jnp.where(ok, sqdist_point(vectors[vc], pool_vecs), INF)
+            ids = jnp.where(ok, pool, INVALID)
+            sel, _ = select_neighbors(vectors[vc], ids, pool_vecs, dq, m_l,
+                                      r_alpha)
+            new_row = _pad_row(sel, M0)
+            return jnp.where(v >= 0, new_row, layer_nbrs[vc]), vc
+
+    new_rows, targets = jax.vmap(repair_one)(p_ids)
+    safe = jnp.where(p_ids >= 0, targets, N)
+    layer_nbrs = layer_nbrs.at[safe].set(new_rows, mode="drop")
+    return nbrs.at[layer].set(layer_nbrs)
+
+
+# ---------------------------------------------------------------------------
+# layer-inheriting re-insert (paper Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def _update_reinsert(params: HNSWParams, index: HNSWIndex, x: jax.Array,
+                     pid: jax.Array, insert_alpha: float) -> HNSWIndex:
+    """Re-link slot ``pid`` (already holding vector x) at its inherited level."""
+    lvl = index.levels[pid]
+    nbrs = index.neighbors
+    ep = jnp.clip(index.entry, 0)
+    for layer in range(params.num_layers - 1, 0, -1):
+        active = (layer <= index.max_layer) & (layer > lvl)
+        ep = jax.lax.cond(
+            active,
+            lambda ep: greedy_layer(params, index, x, ep, layer),
+            lambda ep: ep, ep)
+
+    for layer in range(params.num_layers - 1, -1, -1):
+        active = layer <= lvl
+
+        def do(nbrs_ep, layer=layer):
+            nbrs, ep = nbrs_ep
+            view = HNSWIndex(index.vectors, index.labels, index.levels, nbrs,
+                             index.deleted, index.entry, index.max_layer,
+                             index.count, index.rng)
+            m_l = params.m_for_layer(layer)
+            ids, dists = search_layer(params, view, x, ep, layer,
+                                      params.ef_construction)
+            ok = (ids >= 0) & (ids != pid) & ~index.deleted[jnp.clip(ids, 0)]
+            dists = jnp.where(ok, dists, INF)
+            ids = jnp.where(ok, ids, INVALID)
+            cand_vecs = index.vectors[jnp.clip(ids, 0)]
+            sel, _ = select_neighbors(x, ids, cand_vecs, dists, m_l,
+                                      insert_alpha)
+            layer_nbrs = nbrs[layer].at[pid].set(_pad_row(sel, params.M0))
+            layer_nbrs = add_reverse_edges(params, layer_nbrs, index.vectors,
+                                           pid, sel, layer, insert_alpha)
+            next_ep = jnp.where(ids[jnp.argmin(dists)] >= 0,
+                                jnp.clip(ids[jnp.argmin(dists)], 0), ep)
+            return nbrs.at[layer].set(layer_nbrs), next_ep
+
+        nbrs, ep = jax.lax.cond(active, do, lambda t: t, (nbrs, ep))
+
+    return HNSWIndex(index.vectors, index.labels, index.levels, nbrs,
+                     index.deleted, index.entry, index.max_layer, index.count,
+                     index.rng)
+
+
+# ---------------------------------------------------------------------------
+# replaced_update entry point
+# ---------------------------------------------------------------------------
+
+def replaced_update(params: HNSWParams, index: HNSWIndex, x: jax.Array,
+                    label: jax.Array, variant: str = "mn_ru_gamma") -> HNSWIndex:
+    """Insert ``x`` reusing the first deleted slot (paper Algorithms 2+3).
+
+    Falls back to a fresh insert into a free slot when no deleted point
+    exists (paper line: "Perform normal insertion").
+    """
+    if variant not in _VARIANT_CFG:
+        raise ValueError(f"unknown variant {variant!r}; options: {VARIANTS}")
+    label = jnp.asarray(label, jnp.int32)
+    d_slot = first_deleted_slot(index)
+
+    def fresh(ix: HNSWIndex) -> HNSWIndex:
+        pid = first_free_slot(ix)
+
+        def do(ix):
+            return insert(params, ix, x, jnp.clip(pid, 0), label)
+        return jax.lax.cond(pid >= 0, do, lambda ix: ix, ix)
+
+    def replace(ix: HNSWIndex) -> HNSWIndex:
+        pid = d_slot
+        vectors = ix.vectors.at[pid].set(x.astype(ix.vectors.dtype))
+        labels = ix.labels.at[pid].set(label)
+        deleted = ix.deleted.at[pid].set(False)
+        lvl_d = ix.levels[pid]
+        nbrs = ix.neighbors
+        for layer in range(params.num_layers):
+            active = layer <= lvl_d
+            nbrs = jax.lax.cond(
+                active,
+                lambda nbrs, layer=layer: _repair_layer(
+                    params, nbrs, vectors, deleted, pid, layer, variant),
+                lambda nbrs: nbrs, nbrs)
+        repaired = HNSWIndex(vectors, labels, ix.levels, nbrs, deleted,
+                             ix.entry, ix.max_layer, ix.count, ix.rng)
+        return _update_reinsert(params, repaired, x, pid, params.alpha)
+
+    return jax.lax.cond(d_slot >= 0, replace, fresh, index)
+
+
+@partial(jax.jit, static_argnames=("params", "variant"))
+def replaced_update_jit(params: HNSWParams, index: HNSWIndex, x: jax.Array,
+                        label: jax.Array, variant: str = "mn_ru_gamma"):
+    return replaced_update(params, index, x, label, variant)
+
+
+@partial(jax.jit, static_argnames=("params", "variant"))
+def delete_and_update_batch(params: HNSWParams, index: HNSWIndex,
+                            del_labels: jax.Array, new_X: jax.Array,
+                            new_labels: jax.Array,
+                            variant: str = "mn_ru_gamma") -> HNSWIndex:
+    """One compiled program: mark ``del_labels`` deleted, then replace each
+    with a row of ``new_X`` (scan-fused, amortises dispatch for benchmarks)."""
+
+    def del_body(ix, lbl):
+        return mark_delete(ix, lbl), ()
+
+    index, _ = jax.lax.scan(del_body, index, del_labels)
+
+    def upd_body(ix, xl):
+        x, lbl = xl
+        return replaced_update(params, ix, x, lbl, variant), ()
+
+    index, _ = jax.lax.scan(upd_body, index, (new_X, new_labels))
+    return index

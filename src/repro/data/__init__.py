@@ -1,0 +1,6 @@
+from .synthetic import (clustered_vectors, lm_token_batch, recsys_batch,
+                        gnn_batch, brute_force_knn)
+from .pipeline import PrefetchPipeline, SyntheticStream
+
+__all__ = ["clustered_vectors", "lm_token_batch", "recsys_batch", "gnn_batch",
+           "brute_force_knn", "PrefetchPipeline", "SyntheticStream"]

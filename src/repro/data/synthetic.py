@@ -1,0 +1,106 @@
+"""Seeded synthetic datasets (the container is offline; see DESIGN.md §6).
+
+The ANN experiments use clustered Gaussians with dimensions matched to the
+paper's datasets (SIFT d=128, GIST d=960, ImageNet d=150); all metrics are
+relative to exact brute force so the phenomena (unreachable-point growth,
+update-time ratios) carry over.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def clustered_vectors(n: int, d: int, n_clusters: int = 32, seed: int = 0,
+                      scale: float = 0.15) -> np.ndarray:
+    """Mixture-of-Gaussians point cloud on the unit sphere shell."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    assign = rng.integers(0, n_clusters, size=n)
+    X = centers[assign] + scale * rng.normal(size=(n, d))
+    return X.astype(np.float32)
+
+
+def brute_force_knn(X: np.ndarray, Q: np.ndarray, k: int) -> np.ndarray:
+    """Exact ground truth ids [q, k] by squared L2 (blocked to bound memory)."""
+    out = np.empty((Q.shape[0], k), np.int64)
+    xn = (X * X).sum(1)
+    for i in range(0, Q.shape[0], 256):
+        q = Q[i:i + 256]
+        d = xn[None, :] - 2 * q @ X.T
+        out[i:i + 256] = np.argsort(d, axis=1)[:, :k]
+    return out
+
+
+def lm_token_batch(vocab: int, batch: int, seq: int, seed: int) -> np.ndarray:
+    """Zipf-ish synthetic token stream, [batch, seq+1] int32."""
+    rng = np.random.default_rng(seed)
+    z = rng.zipf(1.3, size=(batch, seq + 1)) - 1
+    return np.minimum(z, vocab - 1).astype(np.int32)
+
+
+def recsys_batch(cfg, batch: int, seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    out = {"label": rng.integers(0, 2, size=batch).astype(np.int32)}
+    if cfg.kind in ("wide_deep", "autoint"):
+        out["sparse_ids"] = rng.integers(0, V, size=(batch, cfg.n_sparse)).astype(np.int32)
+        if cfg.kind == "wide_deep":
+            bag = rng.integers(0, V, size=(batch, cfg.bag_len)).astype(np.int32)
+            drop = rng.random((batch, cfg.bag_len)) < 0.3
+            bag[drop] = -1
+            out["bag_ids"] = bag
+    elif cfg.kind == "dien":
+        hist = rng.integers(0, cfg.n_items, size=(batch, cfg.seq_len)).astype(np.int32)
+        cut = rng.integers(1, cfg.seq_len + 1, size=batch)
+        hist[np.arange(cfg.seq_len)[None, :] >= cut[:, None]] = -1
+        out["hist_ids"] = hist
+        out["target_id"] = rng.integers(0, cfg.n_items, size=batch).astype(np.int32)
+    elif cfg.kind == "sasrec":
+        seq = rng.integers(0, cfg.n_items, size=(batch, cfg.seq_len)).astype(np.int32)
+        out["seq_ids"] = seq
+        out["pos_ids"] = np.roll(seq, -1, axis=1).astype(np.int32)
+        out["pos_ids"][:, -1] = rng.integers(0, cfg.n_items, size=batch)
+        out["neg_ids"] = rng.integers(0, cfg.n_items,
+                                      size=(batch, cfg.seq_len)).astype(np.int32)
+        out["target_id"] = out["pos_ids"][:, -1].copy()
+    return out
+
+
+def _pair_potential(pos: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                    graph_id: np.ndarray, n_graphs: int) -> np.ndarray:
+    """Cheap learnable target: sum over edges of a Morse-ish pair term."""
+    r = np.linalg.norm(pos[dst] - pos[src], axis=1) + 1e-9
+    e = np.exp(-r) - 0.5 * np.exp(-2 * r)
+    out = np.zeros(n_graphs)
+    np.add.at(out, graph_id[dst], e)
+    return out.astype(np.float32)
+
+
+def gnn_batch(cfg, n_nodes: int, n_edges: int, seed: int,
+              n_graphs: int = 1, d_feat: int = 0) -> dict:
+    """Random geometric-ish graph batch with synthetic energy targets."""
+    rng = np.random.default_rng(seed)
+    pos = (rng.normal(size=(n_nodes, 3)) * 2.0).astype(np.float32)
+    species = rng.integers(0, cfg.n_species, size=n_nodes).astype(np.int32)
+    src = rng.integers(0, n_nodes, size=n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, size=n_edges).astype(np.int32)
+    nodes_per_graph = n_nodes // n_graphs
+    graph_id = np.minimum(np.arange(n_nodes) // nodes_per_graph,
+                          n_graphs - 1).astype(np.int32)
+    # keep edges within one graph
+    src = np.where(graph_id[src] == graph_id[dst], src, dst)
+    batch = {
+        "positions": pos,
+        "species": species,
+        "src": src,
+        "dst": dst,
+        "edge_mask": np.ones(n_edges, np.float32),
+        "node_mask": np.ones(n_nodes, np.float32),
+        "graph_id": graph_id,
+        "n_graphs": n_graphs,
+        "energy_target": _pair_potential(pos, src, dst, graph_id, n_graphs),
+    }
+    if d_feat:
+        batch["node_feats"] = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    return batch

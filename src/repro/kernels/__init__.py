@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the ANN hot paths.
+
+  l2dist    — tiled pairwise squared-L2 distance matrix (MXU matmul form)
+  topk_dist — streaming fused distance + running top-k (never materialises
+              the full [Q, N] matrix; FlashAttention-style online reduction)
+  embed_bag — EmbeddingBag gather+segment-sum via one-hot MXU matmul tiles
+
+Each package ships ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit wrapper, padding, backend dispatch) and ``ref.py`` (pure-jnp oracle).
+On this CPU container kernels run with ``interpret=True``; on TPU the same
+BlockSpecs give hardware-aligned VMEM tiling.
+"""
+from .l2dist.ops import l2dist
+from .topk_dist.ops import topk_dist
+from .embed_bag.ops import embed_bag
+
+__all__ = ["l2dist", "topk_dist", "embed_bag"]

@@ -1,0 +1,62 @@
+"""EmbeddingBag Pallas kernel: gather + segment-sum via one-hot MXU matmuls.
+
+Hardware adaptation (see DESIGN.md): TPUs have no fast random-access gather
+from HBM inside a kernel, but they have a 128x128 systolic MXU. The classic
+TPU embedding trick: stream vocabulary tiles ``[bv, D]`` through VMEM and
+convert the in-tile lookups to a one-hot matmul
+
+    onehot[bb*L, bv] @ table_tile[bv, D]
+
+The bag reduction (segment-sum over the L slots of each bag) is a reshape +
+axis-sum fused into the same accumulation. Grid = (B/bb, V/bv), vocab axis
+innermost so the [bb, D] accumulator stays VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _embed_bag_kernel(idx_ref, tab_ref, o_ref, *, bv, L):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...]                                   # [bb, L] int32
+    tab = tab_ref[...]                                   # [bv, D]
+    bb = idx.shape[0]
+    local = idx - j * bv
+    in_tile = (local >= 0) & (local < bv) & (idx >= 0)
+    flat = local.reshape(bb * L)
+    ok = in_tile.reshape(bb * L)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bb * L, bv), 1)
+    onehot = ((iota == flat[:, None]) & ok[:, None]).astype(tab.dtype)
+    contrib = jax.lax.dot_general(onehot, tab, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    o_ref[...] += contrib.reshape(bb, L, -1).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bv", "interpret"))
+def embed_bag_pallas(table: jax.Array, indices: jax.Array, *, bb: int = 8,
+                     bv: int = 512, interpret: bool = False) -> jax.Array:
+    """``table[V, D], indices[B, L] -> out[B, D]`` (sum of valid rows)."""
+    V, D = table.shape
+    B, L = indices.shape
+    grid = (B // bb, V // bv)
+    kern = functools.partial(_embed_bag_kernel, bv=bv, L=L)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(indices, table)

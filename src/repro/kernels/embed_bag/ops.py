@@ -1,0 +1,39 @@
+"""Jit wrapper for the EmbeddingBag kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .embed_bag import embed_bag_pallas
+from .ref import embed_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bb", "bv", "interpret",
+                                             "use_ref"))
+def embed_bag(table: jax.Array, indices: jax.Array, mode: str = "sum", *,
+              bb: int = 8, bv: int = 512, interpret: bool | None = None,
+              use_ref: bool = False) -> jax.Array:
+    """EmbeddingBag: ``out[b] = reduce_l table[indices[b, l]]`` (-1 = pad).
+
+    ``use_ref=True`` routes to the jnp take+mask oracle (the GSPMD-friendly
+    path used inside sharded models).
+    """
+    if use_ref:
+        return embed_bag_ref(table, indices, mode).astype(jnp.float32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    V, D = table.shape
+    B, L = indices.shape
+    bb_ = min(bb, B) if B % min(bb, B) == 0 else 1
+    bv_ = min(bv, V)
+    pad_b = (-B) % bb_
+    pad_v = (-V) % bv_
+    tp = jnp.pad(table, ((0, pad_v), (0, 0)))
+    ip = jnp.pad(indices, ((0, pad_b), (0, 0)), constant_values=-1)
+    out = embed_bag_pallas(tp, ip, bb=bb_, bv=bv_, interpret=interpret)[:B]
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(indices >= 0, axis=1, keepdims=True), 1)
+        out = out / cnt.astype(out.dtype)
+    return out

@@ -1,0 +1,19 @@
+"""Pure-jnp EmbeddingBag oracle (take + masked sum — JAX has no native op)."""
+import jax
+import jax.numpy as jnp
+
+
+def embed_bag_ref(table: jax.Array, indices: jax.Array,
+                  mode: str = "sum") -> jax.Array:
+    """``out[b] = reduce_l table[indices[b, l]]`` ignoring ``-1`` padding.
+
+    table: [V, D]; indices: [B, L] int32 with -1 = empty slot.
+    """
+    valid = indices >= 0
+    rows = table[jnp.clip(indices, 0)]                    # [B, L, D]
+    rows = rows * valid[..., None].astype(table.dtype)
+    out = jnp.sum(rows, axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+        out = out / cnt.astype(table.dtype)
+    return out

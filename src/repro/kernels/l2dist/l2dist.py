@@ -1,0 +1,54 @@
+"""Tiled pairwise squared-L2 distance Pallas kernel.
+
+Grid = (Q/bq, N/bn, d/bd); the contraction axis d is the innermost grid
+dimension so the f32 accumulator tile in the output block stays resident in
+VMEM across k-steps (standard Pallas matmul accumulation pattern).
+
+Per k-step the partial contribution of a d-slice to ||x-y||^2 is
+
+    sum_k (x_k^2) + sum_k (y_k^2) - 2 * X_tile @ Y_tile^T
+
+which accumulates exactly over d-slices. The matmul term is MXU work
+(bq x bd x bn, 128-aligned); the norm terms are VPU row reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _l2dist_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # [bq, bd]
+    y = y_ref[...].astype(jnp.float32)          # [bn, bd]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # [bq, 1]
+    yy = jnp.sum(y * y, axis=1, keepdims=True)  # [bn, 1]
+    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [bq, bn]
+    o_ref[...] += xx + yy.T - 2.0 * xy
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "bd", "interpret"))
+def l2dist_pallas(X: jax.Array, Y: jax.Array, *, bq: int = 128, bn: int = 128,
+                  bd: int = 128, interpret: bool = False) -> jax.Array:
+    """``[Q, d] x [N, d] -> [Q, N]`` squared L2. Dims must divide blocks."""
+    Q, d = X.shape
+    N, _ = Y.shape
+    grid = (Q // bq, N // bn, d // bd)
+    return pl.pallas_call(
+        _l2dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.float32),
+        interpret=interpret,
+    )(X, Y)

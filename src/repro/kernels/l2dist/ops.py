@@ -1,0 +1,46 @@
+"""Jit wrapper for the l2dist kernel: padding + backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .l2dist import l2dist_pallas
+from .ref import l2dist_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bn", "bd", "interpret", "use_ref"))
+def l2dist(X: jax.Array, Y: jax.Array, *, bq: int = 128, bn: int = 128,
+           bd: int = 128, interpret: bool | None = None,
+           use_ref: bool = False) -> jax.Array:
+    """Pairwise squared L2 ``[Q, N]``; pads inputs to block multiples.
+
+    ``interpret=None`` auto-selects interpret mode off-TPU. ``use_ref=True``
+    routes to the jnp oracle (used inside pjit graphs where GSPMD should
+    partition the matmul itself).
+    """
+    if use_ref:
+        return l2dist_ref(X, Y)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q, d = X.shape
+    N, _ = Y.shape
+    bq_ = min(bq, max(8, Q))
+    bn_ = min(bn, max(8, N))
+    bd_ = min(bd, d)
+    Xp = _pad_to(_pad_to(X, 0, bq_), 1, bd_)
+    Yp = _pad_to(_pad_to(Y, 0, bn_), 1, bd_)
+    out = l2dist_pallas(Xp, Yp, bq=bq_, bn=bn_, bd=bd_, interpret=interpret)
+    return out[:Q, :N]

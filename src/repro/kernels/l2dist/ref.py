@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the pairwise squared-L2 kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def l2dist_ref(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """``out[i, j] = ||X[i] - Y[j]||^2`` in f32, matmul form."""
+    X = X.astype(jnp.float32)
+    Y = Y.astype(jnp.float32)
+    nx = jnp.sum(X * X, axis=-1, keepdims=True)
+    ny = jnp.sum(Y * Y, axis=-1, keepdims=True).T
+    return jnp.maximum(nx + ny - 2.0 * (X @ Y.T), 0.0)

@@ -1,0 +1,37 @@
+"""Jit wrapper for the streaming top-k kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .topk_dist import topk_dist_pallas
+from .ref import topk_dist_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret",
+                                             "use_ref"))
+def topk_dist(Q: jax.Array, Y: jax.Array, k: int, *, bq: int = 8,
+              bn: int = 512, interpret: bool | None = None,
+              use_ref: bool = False):
+    """k nearest rows of ``Y[N, d]`` per query row of ``Q[q, d]``.
+
+    Returns ``(dists[q, k], ids[q, k])`` sorted ascending. Pads freely; padded
+    candidates are masked inside the kernel via the real-N bound.
+    """
+    if use_ref:
+        return topk_dist_ref(Q, Y, k)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nq, d = Q.shape
+    N, _ = Y.shape
+    bq_ = min(bq, nq) if nq % min(bq, nq) == 0 else 1
+    bn_ = min(bn, N)
+    pad_q = (-nq) % bq_
+    pad_n = (-N) % bn_
+    Qp = jnp.pad(Q, ((0, pad_q), (0, 0)))
+    Yp = jnp.pad(Y, ((0, pad_n), (0, 0)))
+    dists, ids = topk_dist_pallas(Qp, Yp, k=k, n_real=N, bq=bq_, bn=bn_,
+                                  interpret=interpret)
+    return dists[:nq], ids[:nq]

@@ -1,0 +1,92 @@
+"""Streaming fused distance + top-k Pallas kernel.
+
+The retrieval hot path (1 query batch x 10^6 candidates) must never
+materialise the full [Q, N] distance matrix (N=10^6 @ f32 = 4 MB *per query
+row*). This kernel streams candidate tiles of Y through VMEM and maintains a
+running [bq, k] top-k buffer in the output block — the same online-reduction
+structure as FlashAttention's running softmax, applied to selection.
+
+Grid = (Q/bq, N/bn), candidate axis innermost so the output block (the
+running buffer) stays VMEM-resident across the sweep. The merge is k rounds
+of masked min-extraction over [bq, k+bn] — pure VPU elementwise/reduce ops
+(no gather, no sort), so it lowers cleanly to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INF = float("inf")
+
+
+def _merge_topk(vals, ids, k):
+    """k rounds of masked min-extraction. vals/ids: [bq, C] -> ([bq,k],[bq,k])."""
+    out_v = []
+    out_i = []
+    for _ in range(k):
+        m = jnp.min(vals, axis=1)                                   # [bq]
+        hit = vals == m[:, None]
+        first = (jnp.cumsum(hit.astype(jnp.int32), axis=1) == 1) & hit
+        sel_id = jnp.sum(jnp.where(first, ids, 0), axis=1)
+        out_v.append(m)
+        out_i.append(sel_id)
+        vals = jnp.where(first, _INF, vals)
+    return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _topk_dist_kernel(q_ref, y_ref, od_ref, oi_ref, *, k, bn, n_real):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        od_ref[...] = jnp.full_like(od_ref, _INF)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)                              # [bq, d]
+    y = y_ref[...].astype(jnp.float32)                              # [bn, d]
+    qq = jnp.sum(q * q, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)
+    d = qq + yy.T - 2.0 * jax.lax.dot_general(
+        q, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d = jnp.maximum(d, 0.0)                                         # [bq, bn]
+
+    gid = j * bn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)  # global ids
+    d = jnp.where(gid < n_real, d, _INF)                            # mask padding
+
+    vals = jnp.concatenate([od_ref[...], d], axis=1)                # [bq, k+bn]
+    ids = jnp.concatenate([oi_ref[...], gid], axis=1)
+    nv, ni = _merge_topk(vals, ids, k)
+    od_ref[...] = nv
+    oi_ref[...] = ni
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret",
+                                             "n_real"))
+def topk_dist_pallas(Q: jax.Array, Y: jax.Array, *, k: int, n_real: int,
+                     bq: int = 8, bn: int = 512,
+                     interpret: bool = False):
+    """``(dists[q,k], ids[q,k])`` of k nearest Y rows. Q, N divide blocks."""
+    nq, d = Q.shape
+    N, _ = Y.shape
+    grid = (nq // bq, N // bn)
+    kern = functools.partial(_topk_dist_kernel, k=k, bn=bn, n_real=n_real)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((nq, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(Q, Y)

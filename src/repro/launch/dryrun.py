@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry run: AOT lower+compile every (arch x shape x mesh) cell.
+
+For each cell this produces — with ShapeDtypeStruct stand-ins, no device
+allocation — the compiled SPMD executable for the production mesh, its
+memory_analysis() (proves the cell fits), cost_analysis() (FLOPs/bytes for
+the roofline) and the collective-traffic breakdown parsed from the
+partitioned HLO. Artifacts land in ``experiments/artifacts/*.json`` and feed
+``benchmarks/roofline.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, shapes_for
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
+from repro.models.api import get_api
+from repro.models.scan_ctl import unrolled_scans
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_stats import collective_stats
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "artifacts")
+
+
+def _named(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def compile_cell(cfg, shape_name: str, mesh):
+    """AOT lower+compile one (config x shape x mesh) cell; no allocation."""
+    shape = shapes_for(cfg)[shape_name]
+    api = get_api(cfg)
+    mesh_axes = dict(mesh.shape)
+    bundle = api.make_step(shape, mesh_axes)
+    api = bundle.api or api       # shape-specialised config (GNN frontends)
+
+    in_args = [api.param_shapes()]
+    in_shardings = [_named(api.param_pspecs(mesh_axes), mesh)]
+    if bundle.with_opt:
+        in_args.append(api.opt_shapes())
+        in_shardings.append(_named(api.opt_pspecs(mesh_axes), mesh))
+    in_args.extend(bundle.args)
+    in_shardings.extend(_named(s, mesh) for s in bundle.arg_pspecs)
+
+    from repro.models import dist_ctx
+    t0 = time.time()
+    with mesh, dist_ctx.use_mesh(mesh):
+        jitted = jax.jit(bundle.fn, in_shardings=tuple(in_shardings),
+                         donate_argnums=bundle.donate)
+        lowered = jitted.lower(*in_args)
+        compiled = lowered.compile()
+    return compiled, bundle, time.time() - t0
+
+
+def calibration_variants(cfg, shape_name: str):
+    """Small unrolled-scan variants for trip-count cost correction.
+
+    XLA HLO cost analysis counts while-loop bodies ONCE (verified; see
+    EXPERIMENTS.md §Dry-run). We compile two small fully-unrolled variants
+    and extrapolate linearly in the trip count, which is exact because the
+    unrolled module's cost is affine in depth.
+
+    Returns (target_trips, [(cfg_a, trips_a), (cfg_b, trips_b)]) or None.
+    """
+    if isinstance(cfg, LMConfig):
+        base = max(cfg.first_dense_layers + 1, 2)
+        return cfg.num_layers, [
+            (dataclasses.replace(cfg, num_layers=base), base),
+            (dataclasses.replace(cfg, num_layers=base + 1), base + 1)]
+    if isinstance(cfg, GNNConfig):
+        return cfg.n_layers, [
+            (dataclasses.replace(cfg, n_layers=1), 1),
+            (dataclasses.replace(cfg, n_layers=2), 2)]
+    if isinstance(cfg, RecSysConfig) and cfg.kind == "dien":
+        return cfg.seq_len, [
+            (dataclasses.replace(cfg, seq_len=2), 2),
+            (dataclasses.replace(cfg, seq_len=3), 3)]
+    return None
+
+
+def _cost_record(compiled):
+    ca = compiled.cost_analysis() or {}
+    colls = collective_stats(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(colls.get("total_bytes", 0)),
+        "collectives": colls,
+    }
+
+
+def _extrapolate(va: dict, ta: int, vb: dict, tb: int, t: int) -> dict:
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes"):
+        slope = (vb[key] - va[key]) / (tb - ta)
+        out[key] = va[key] + slope * (t - ta)
+    cats = set(va["collectives"]) | set(vb["collectives"])
+    out["collectives"] = {}
+    for c in cats:
+        if c in ("total_bytes", "total_count"):
+            continue
+        a = va["collectives"].get(c, {"bytes": 0, "count": 0})
+        b = vb["collectives"].get(c, {"bytes": 0, "count": 0})
+        out["collectives"][c] = {
+            k: a[k] + (b[k] - a[k]) / (tb - ta) * (t - ta)
+            for k in ("bytes", "count")}
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: str, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    compiled, bundle, compile_s = compile_cell(cfg, shape_name, mesh)
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    raw = _cost_record(compiled)
+
+    calib = calibration_variants(cfg, shape_name)
+    if calib is not None:
+        target, variants = calib
+        points = []
+        with unrolled_scans():
+            for vcfg, trips in variants:
+                c, _, _ = compile_cell(vcfg, shape_name, mesh)
+                points.append((_cost_record(c), trips))
+        (va, ta), (vb, tb) = points
+        cost = _extrapolate(va, ta, vb, tb, target)
+        calib_rec = {"target_trips": target,
+                     "points": [{"trips": t, **{k: v[k] for k in
+                                 ("flops", "bytes_accessed",
+                                  "collective_bytes")}}
+                                for v, t in points]}
+    else:
+        cost = {k: raw[k] for k in ("flops", "bytes_accessed",
+                                    "collective_bytes", "collectives")}
+        calib_rec = None
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "mesh_shape": dict(mesh.shape),
+        "step": bundle.name,
+        "compile_seconds": round(compile_s, 2),
+        "per_device_bytes": {
+            "arguments": int(ma.argument_size_in_bytes),
+            "outputs": int(ma.output_size_in_bytes),
+            "temps": int(ma.temp_size_in_bytes),
+            "aliased": int(ma.alias_size_in_bytes),
+            "total_peak_estimate": int(ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+        },
+        # per-device, trip-count-corrected (see "calibration")
+        "cost": cost,
+        "cost_raw_scan_body_once": {k: raw[k] for k in
+                                    ("flops", "bytes_accessed",
+                                     "collective_bytes")},
+        "calibration": calib_rec,
+        "hlo_size_chars": len(hlo),
+    }
+    if hasattr(cfg, "param_count"):
+        rec["param_count"] = int(cfg.param_count())
+        rec["active_param_count"] = int(cfg.active_param_count())
+    if arch in LM_FULL_ATTENTION and shape_name == "long_500k":
+        rec["note"] = ("skip-per-spec for full-attention archs; run anyway as "
+                       "[extra] — decode against a 512k KV cache is linear, "
+                       "not quadratic (see DESIGN.md §4)")
+
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"dryrun_{mesh_name}_{arch}_{shape_name}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, fname.replace(".json", ".hlo.txt")),
+                  "w") as f:
+            f.write(hlo)
+    return rec
+
+
+LM_FULL_ATTENTION = {"granite_moe_3b_a800m", "deepseek_moe_16b",
+                     "codeqwen15_7b", "yi_9b", "stablelm_1_6b"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod2x16x16", make_production_mesh(multi_pod=True)))
+
+    cells = []
+    archs = ARCHS if (args.all or args.arch is None) else [
+        args.arch.replace("-", "_").replace("1.5", "15")]
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes_for(cfg):
+            if args.shape and sname != args.shape:
+                continue
+            cells.append((arch, sname))
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch, sname in cells:
+            fname = os.path.join(args.out,
+                                 f"dryrun_{mesh_name}_{arch}_{sname}.json")
+            if args.skip_existing and os.path.exists(fname):
+                print(f"[skip] {mesh_name} {arch} {sname}")
+                continue
+            try:
+                rec = run_cell(arch, sname, mesh, mesh_name, args.out,
+                               args.save_hlo)
+                pb = rec["per_device_bytes"]["total_peak_estimate"] / 2**30
+                print(f"[ok]   {mesh_name:16s} {arch:22s} {sname:14s} "
+                      f"compile={rec['compile_seconds']:6.1f}s "
+                      f"peak/dev={pb:6.2f}GiB "
+                      f"flops/dev={rec['cost']['flops']:.3e} "
+                      f"coll={rec['cost']['collective_bytes']:.3e}B",
+                      flush=True)
+            except Exception as e:
+                failures.append((mesh_name, arch, sname, repr(e)))
+                print(f"[FAIL] {mesh_name} {arch} {sname}: {e}", flush=True)
+                traceback.print_exc()
+    print(f"\n{len(failures)} failures")
+    for f in failures:
+        print("  ", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Post-SPMD HLO text analysis: collective bytes per category.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic; we parse the partitioned HLO module text and sum the OPERAND sizes
+of every collective op (matching the roofline definition in the assignment).
+Async pairs (-start/-done) are counted once, on the -start.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(([^)]*)\)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes per collective category over a partitioned module."""
+    sizes: dict[str, int] = {}
+    per_cat = defaultdict(lambda: {"bytes": 0, "count": 0})
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, args = m.groups()
+        sizes[name] = shape_bytes(type_str)
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in COLLECTIVES:
+            operand_bytes = 0
+            for a in re.findall(r"%?([\w.\-]+)", args):
+                if a in sizes:
+                    operand_bytes += sizes[a]
+            if operand_bytes == 0:          # fallback: result size
+                operand_bytes = sizes[name]
+            per_cat[base]["bytes"] += operand_bytes
+            per_cat[base]["count"] += 1
+    out = {k: dict(v) for k, v in per_cat.items()}
+    out["total_bytes"] = sum(v["bytes"] for v in per_cat.values())
+    out["total_count"] = sum(v["count"] for v in per_cat.values())
+    return out

@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run entrypoint must set XLA_FLAGS before
+the first jax device query.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; the multi-pod mesh adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axes=("data",)):
+    """Whatever this host has, flattened onto one axis (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), axes)

@@ -1,0 +1,109 @@
+"""ANN serving driver: the paper's system end-to-end.
+
+Builds an MN-RU HNSW index over a synthetic corpus, then serves BATCHED
+queries while a stream of real-time updates (markDelete + replaced_update)
+mutates the index — exactly the paper's workload. Reports QPS, update ops/s,
+recall@k vs exact brute force, and unreachable-point counts; optionally
+maintains the backup index (dualSearch).
+
+  PYTHONPATH=src python -m repro.launch.serve --n 5000 --dim 64 \
+      --variant mn_ru_gamma --rounds 10 --updates-per-round 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (HNSWParams, DualIndexManager, batch_knn, build,
+                        count_unreachable)
+from repro.data import brute_force_knn, clustered_vectors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=5000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--ef", type=int, default=64)
+    ap.add_argument("--M", type=int, default=8)
+    ap.add_argument("--variant", default="mn_ru_gamma")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--updates-per-round", type=int, default=100)
+    ap.add_argument("--backup", action="store_true")
+    ap.add_argument("--tau", type=int, default=400)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    X = clustered_vectors(args.n, args.dim, seed=0)
+    Q = clustered_vectors(args.queries, args.dim, seed=1)
+    params = HNSWParams(M=args.M, M0=2 * args.M, num_layers=4,
+                        ef_construction=args.ef, ef_search=args.ef)
+
+    print(f"building index over {args.n} x {args.dim} ...", flush=True)
+    t0 = time.time()
+    index = build(params, jnp.asarray(X))
+    index.vectors.block_until_ready()
+    print(f"  built in {time.time() - t0:.1f}s")
+
+    mgr = DualIndexManager(params, index, tau=args.tau,
+                           backup_capacity=max(args.n // 8, 64))
+
+    next_label = args.n
+    live = dict(enumerate(range(args.n)))  # label -> row id in X_all
+    X_all = [X]
+
+    for rnd in range(args.rounds):
+        # --- update stream -------------------------------------------------
+        del_labels = rng.choice(sorted(live), size=args.updates_per_round,
+                                replace=False).astype(np.int32)
+        newX = clustered_vectors(args.updates_per_round, args.dim,
+                                 seed=100 + rnd)
+        new_labels = np.arange(next_label,
+                               next_label + args.updates_per_round,
+                               dtype=np.int32)
+        next_label += args.updates_per_round
+        t0 = time.time()
+        mgr.replaced_update_batch(jnp.asarray(del_labels), jnp.asarray(newX),
+                                  jnp.asarray(new_labels), args.variant)
+        mgr.index.vectors.block_until_ready()
+        upd_dt = time.time() - t0
+        for dl in del_labels:
+            del live[int(dl)]
+        base = sum(x.shape[0] for x in X_all)
+        for i, nl in enumerate(new_labels):
+            live[int(nl)] = base + i
+        X_all.append(newX)
+
+        # --- batched queries ----------------------------------------------
+        t0 = time.time()
+        if args.backup:
+            labels, dists = mgr.search(jnp.asarray(Q), args.k)
+        else:
+            labels, _, dists = batch_knn(params, mgr.index, jnp.asarray(Q),
+                                         args.k)
+        labels.block_until_ready()
+        q_dt = time.time() - t0
+
+        # --- recall vs exact over the LIVE set ------------------------------
+        Xcat = np.concatenate(X_all)
+        live_labels = np.fromiter(live.keys(), dtype=np.int64)
+        live_rows = Xcat[[live[int(l)] for l in live_labels]]
+        gt_idx = brute_force_knn(live_rows, Q, args.k)
+        gt_labels = live_labels[gt_idx]
+        lab_np = np.asarray(labels)
+        recall = np.mean([len(set(lab_np[i]) & set(gt_labels[i])) / args.k
+                          for i in range(args.queries)])
+        u_ind, u_bfs = count_unreachable(mgr.index)
+        print(f"round {rnd:3d}: updates {args.updates_per_round / upd_dt:8.1f} ops/s"
+              f" | queries {args.queries / q_dt:8.1f} qps"
+              f" | recall@{args.k} {recall:.4f}"
+              f" | unreachable indeg={int(u_ind)} bfs={int(u_bfs)}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from . import api, e3, gnn_common, nequip, recsys, transformer
+from .api import ArchAPI, StepBundle, get_api, make_train_step
+
+__all__ = ["api", "e3", "gnn_common", "nequip", "recsys", "transformer",
+           "ArchAPI", "StepBundle", "get_api", "make_train_step"]

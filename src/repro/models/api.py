@@ -1,0 +1,323 @@
+"""Uniform per-architecture API: init / pspecs / step functions / input specs.
+
+``get_api(config)`` returns an ArchAPI whose ``make_step(shape, mesh_axes)``
+yields everything the dry-run and the training driver need for one
+(arch x shape) cell:
+
+    fn          jit-able step function
+    args        ShapeDtypeStruct pytree (AOT lowering, no allocation)
+    in_pspecs   PartitionSpecs for (params, [opt_state], *args)
+    out_pspecs  PartitionSpecs for outputs (params/opt kept in place)
+
+Axis conventions: batch over ('pod','data'); tensor/table/expert parallelism
+over 'model'; GNN edges over all axes. Pspecs are filtered to the axes the
+target mesh actually has (single-pod has no 'pod').
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (GNNConfig, LMConfig, RecSysConfig, ShapeSpec)
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from . import nequip, recsys, transformer
+
+
+def _f(axes: tuple, mesh_axes) -> tuple:
+    """Filter axis names to the ones present in the mesh."""
+    return tuple(a for a in axes if a in mesh_axes)
+
+
+def _bspec(B: int, mesh_axes) -> P:
+    """Batch PartitionSpec over ('pod','data') when divisible."""
+    dp = _f(("pod", "data"), mesh_axes)
+    size = int(np.prod([mesh_axes[a] for a in dp])) if dp else 1
+    return P(dp) if (dp and B > 1 and B % size == 0) else P()
+
+
+def _axes_spec(spec: P, mesh_axes: tuple) -> P:
+    """Drop axis names a mesh doesn't have from a PartitionSpec."""
+    parts = []
+    for entry in spec:
+        if entry is None:
+            parts.append(None)
+        elif isinstance(entry, (tuple, list)):
+            kept = _f(tuple(entry), mesh_axes)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(entry if entry in mesh_axes else None)
+    return P(*parts)
+
+
+def filter_pspecs(tree, mesh_axes):
+    return jax.tree.map(
+        lambda s: _axes_spec(s, mesh_axes),
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig):
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {**metrics, **om}
+    return step
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple            # ShapeDtypeStruct pytrees (after params/opt)
+    arg_pspecs: tuple
+    out_pspecs: Any
+    with_opt: bool
+    donate: tuple = ()     # argnums to donate (params/opt for train, caches)
+    api: "ArchAPI | None" = None   # api matching the bundle's (possibly
+                                   # shape-specialised) config — e.g. GNN
+                                   # cells that add a node-feature frontend
+
+
+@dataclasses.dataclass
+class ArchAPI:
+    config: Any
+    family: str
+    init_params: Callable
+    pspec_fn: Callable          # () -> param pspecs (unfiltered)
+    opt_cfg: AdamWConfig
+
+    def param_shapes(self) -> Any:
+        return jax.eval_shape(lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    def opt_shapes(self) -> Any:
+        return jax.eval_shape(adamw_init, self.param_shapes())
+
+    def param_pspecs(self, mesh_axes) -> Any:
+        return filter_pspecs(self.pspec_fn(), mesh_axes)
+
+    def opt_pspecs(self, mesh_axes) -> Any:
+        ps = self.param_pspecs(mesh_axes)
+        return {"m": ps, "v": ps, "step": P()}
+
+    def make_step(self, shape: ShapeSpec, mesh_axes: tuple) -> StepBundle:
+        if self.family == "lm":
+            return _lm_step(self, shape, mesh_axes)
+        if self.family == "gnn":
+            return _gnn_step(self, shape, mesh_axes)
+        if self.family == "recsys":
+            return _recsys_step(self, shape, mesh_axes)
+        raise ValueError(self.family)
+
+
+def get_api(config) -> ArchAPI:
+    opt = AdamWConfig()
+    if isinstance(config, LMConfig):
+        return ArchAPI(config, "lm",
+                       partial(transformer.init_params, config),
+                       partial(transformer.param_pspecs, config), opt)
+    if isinstance(config, GNNConfig):
+        return ArchAPI(config, "gnn",
+                       partial(nequip.init_params, config),
+                       partial(nequip.param_pspecs, config), opt)
+    if isinstance(config, RecSysConfig):
+        return ArchAPI(config, "recsys",
+                       partial(recsys.init_params, config),
+                       partial(recsys.param_pspecs, config), opt)
+    raise TypeError(type(config))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_step(api: ArchAPI, shape: ShapeSpec, mesh_axes) -> StepBundle:
+    cfg: LMConfig = api.config
+    B, S = shape.global_batch, shape.seq_len
+    bspec = _bspec(B, mesh_axes)
+
+    if shape.kind == "train":
+        tokens = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+        # sequence parallelism for the saved layer carries (see forward_hidden)
+        m = mesh_axes.get("model", 0)
+        act_spec = None
+        if m and S % m == 0:
+            dp = _f(("pod", "data"), mesh_axes)
+            b_ax = dp if (dp and B % int(np.prod(
+                [mesh_axes[a] for a in dp])) == 0) else None
+            act_spec = P(b_ax, "model", None)
+        loss = partial(transformer.lm_loss, cfg, act_spec=act_spec)
+        fn = make_train_step(lambda p, b: loss(p, b["tokens"]), api.opt_cfg)
+        pp = api.param_pspecs(mesh_axes)
+        op = api.opt_pspecs(mesh_axes)
+        return StepBundle("train_step", fn, ({"tokens": tokens},),
+                          ({"tokens": P(*bspec, None)},),
+                          (pp, op, None), with_opt=True, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+        def fn(params, batch):
+            logits, cache = transformer.prefill(cfg, params, batch["tokens"])
+            return logits, cache
+        cache_spec = transformer.cache_pspecs(cfg, mesh_axes, batch=B, T=S)
+        return StepBundle("prefill_step", fn, ({"tokens": tokens},),
+                          ({"tokens": P(*bspec, None)},),
+                          (P(*bspec, None), cache_spec), with_opt=False)
+
+    # decode: one token against a seq_len KV cache
+    KV, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    cache = {
+        "k": jax.ShapeDtypeStruct((L, B, S, KV, hd), transformer.COMPUTE_DTYPE),
+        "v": jax.ShapeDtypeStruct((L, B, S, KV, hd), transformer.COMPUTE_DTYPE),
+    }
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    def fn(params, cache, token, pos):
+        return transformer.decode_step(cfg, params, cache, token, pos)
+
+    cache_spec = transformer.cache_pspecs(cfg, mesh_axes, batch=B, T=S)
+    return StepBundle("serve_step", fn, (cache, token, pos),
+                      (cache_spec, bspec, bspec),
+                      (P(*bspec, None), cache_spec),
+                      with_opt=False, donate=(1,))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_batch_specs(cfg: GNNConfig, shape: ShapeSpec, mesh_axes):
+    n_dev = 512  # pad so every mesh size divides
+    if shape.name == "minibatch_lg":
+        # layered fanout subgraph: 1024 seeds, fanout 15-10
+        s = shape.batch_nodes
+        n_edges = s * shape.fanout[0] + s * shape.fanout[0] * shape.fanout[1]
+        n_nodes = shape.n_nodes            # global node arrays (ids are global)
+        n_graphs = 1
+        d_feat = 0
+    else:
+        n_nodes = shape.n_nodes * max(shape.graph_batch, 1)
+        n_edges = shape.n_edges * max(shape.graph_batch, 1)
+        n_graphs = max(shape.graph_batch, 1)
+        d_feat = shape.d_feat
+    Np = _pad_to(n_nodes, n_dev)
+    Ep = _pad_to(n_edges, n_dev)
+    all_ax = _f(("pod", "data", "model"), mesh_axes)
+    batch = {
+        "positions": jax.ShapeDtypeStruct((Np, 3), jnp.float32),
+        "species": jax.ShapeDtypeStruct((Np,), jnp.int32),
+        "src": jax.ShapeDtypeStruct((Ep,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((Ep,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((Ep,), jnp.float32),
+        "node_mask": jax.ShapeDtypeStruct((Np,), jnp.float32),
+        "graph_id": jax.ShapeDtypeStruct((Np,), jnp.int32),
+        "energy_target": jax.ShapeDtypeStruct((n_graphs,), jnp.float32),
+    }
+    specs = {
+        "positions": P(), "species": P(),
+        "src": P(all_ax), "dst": P(all_ax), "edge_mask": P(all_ax),
+        "node_mask": P(), "graph_id": P(), "energy_target": P(),
+    }
+    if d_feat:
+        batch["node_feats"] = jax.ShapeDtypeStruct((Np, d_feat), jnp.float32)
+        specs["node_feats"] = P()
+    return batch, specs, n_graphs, d_feat
+
+
+def _gnn_step(api: ArchAPI, shape: ShapeSpec, mesh_axes) -> StepBundle:
+    cfg: GNNConfig = api.config
+    batch, specs, n_graphs, d_feat = _gnn_batch_specs(cfg, shape, mesh_axes)
+    if d_feat and cfg.d_feat != d_feat:
+        cfg = dataclasses.replace(cfg, d_feat=d_feat)
+        api = get_api(cfg)
+
+    all_ax = _f(("pod", "data", "model"), mesh_axes)
+    n_dev = 1
+    for a in all_ax:
+        n_dev *= mesh_axes[a]
+    n_nodes_padded = batch["positions"].shape[0]
+    act_spec = (P(all_ax, None, None)
+                if all_ax and n_nodes_padded % n_dev == 0 else None)
+    loss = partial(nequip.loss_fn, cfg, act_spec=act_spec)
+
+    def loss_with_static(p, b):
+        return loss(p, {**b, "n_graphs": n_graphs})
+
+    fn = make_train_step(loss_with_static, api.opt_cfg)
+    pp = api.param_pspecs(mesh_axes)
+    op = api.opt_pspecs(mesh_axes)
+    return StepBundle("train_step", fn, (batch,), (specs,),
+                      (pp, op, None), with_opt=True, donate=(0, 1), api=api)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_specs(cfg: RecSysConfig, B: int, kind: str, mesh_axes):
+    bspec = _bspec(B, mesh_axes)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    batch: dict = {}
+    specs: dict = {}
+
+    def add(name, sds, spec):
+        batch[name] = sds
+        specs[name] = spec
+
+    if cfg.kind in ("wide_deep", "autoint"):
+        add("sparse_ids", i32(B, cfg.n_sparse), P(*bspec, None))
+        if cfg.kind == "wide_deep":
+            add("bag_ids", i32(B, cfg.bag_len), P(*bspec, None))
+    elif cfg.kind == "dien":
+        add("hist_ids", i32(B, cfg.seq_len), P(*bspec, None))
+        add("target_id", i32(B), bspec)
+    elif cfg.kind == "sasrec":
+        add("seq_ids", i32(B, cfg.seq_len), P(*bspec, None))
+        if kind == "train":
+            add("pos_ids", i32(B, cfg.seq_len), P(*bspec, None))
+            add("neg_ids", i32(B, cfg.seq_len), P(*bspec, None))
+        else:
+            add("target_id", i32(B), bspec)
+    if kind == "train" and cfg.kind != "sasrec":
+        add("label", i32(B), bspec)
+    return batch, specs
+
+
+def _recsys_step(api: ArchAPI, shape: ShapeSpec, mesh_axes) -> StepBundle:
+    cfg: RecSysConfig = api.config
+    B = shape.batch
+    if shape.kind == "train":
+        batch, specs = _recsys_batch_specs(cfg, B, "train", mesh_axes)
+        fn = make_train_step(partial(recsys.loss_fn, cfg), api.opt_cfg)
+        return StepBundle("train_step", fn, (batch,), (specs,),
+                          (api.param_pspecs(mesh_axes),
+                           api.opt_pspecs(mesh_axes), None), with_opt=True,
+                          donate=(0, 1))
+
+    if shape.kind == "serve":
+        batch, specs = _recsys_batch_specs(cfg, B, "serve", mesh_axes)
+
+        def fn(params, batch):
+            logit, _ = recsys.forward(cfg, params, batch)
+            return logit
+        return StepBundle("serve_step", fn, (batch,), (specs,),
+                          _bspec(B, mesh_axes), with_opt=False)
+
+    # retrieval: 1 query x n_candidates catalogue scoring
+    batch, specs = _recsys_batch_specs(cfg, B, "serve", mesh_axes)
+
+    def fn(params, batch):
+        return recsys.retrieval_scores(cfg, params, batch, k=100)
+    return StepBundle("retrieval_step", fn, (batch,), (specs,),
+                      (P(), P()), with_opt=False)

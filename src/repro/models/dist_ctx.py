@@ -1,0 +1,25 @@
+"""Trace-time mesh context: lets model code pick distribution-aware paths
+(e.g. the shard_map MoE dispatch) without threading a Mesh through every
+call. Set by the dry-run / production launchers around lowering; absent
+(None) on single-device smoke paths, which then use the plain jnp code.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh",
+                                                       default=None)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)

@@ -1,0 +1,128 @@
+"""Minimal E(3)-equivariant toolkit: real spherical harmonics (l <= 2),
+numerically-derived Wigner D matrices and real Clebsch-Gordan coefficients.
+
+Instead of porting e3nn's analytic CG tables, we solve for them numerically
+at import time (cached): for each admissible path (l1, l2 -> l3) the CG
+tensor C is the (1-dimensional) null space of the equivariance constraint
+
+    sum_ij D1[i,i'] D2[j,j'] C[i,j,k] = sum_k' D3[k,k'] C[i',j',k']
+
+stacked over a handful of random rotations, where the D_l are themselves
+recovered from the closed-form spherical harmonics by least squares
+(Y_l(R u) = D_l(R) Y_l(u)). This makes the basis convention self-consistent
+by construction — correctness is pinned by the rotation-invariance tests.
+
+All of this is numpy at trace time; the resulting constants feed jnp einsums.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+_rng = np.random.default_rng(1234)
+
+
+def sh(l: int, u: np.ndarray):
+    """Real spherical harmonics basis (unnormalised, component-closed).
+
+    u: [..., 3] UNIT vectors. Returns [..., 2l+1].
+    """
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    if l == 0:
+        return np.ones_like(x)[..., None]
+    if l == 1:
+        return np.stack([x, y, z], axis=-1)
+    if l == 2:
+        # orthonormal on the sphere (common scale): all components have
+        # <Y^2> = 4/15, so the numeric Wigner D matrices come out orthogonal
+        return np.stack([
+            2 * x * y, 2 * y * z, (3 * z * z - 1.0) / np.sqrt(3.0), 2 * z * x,
+            x * x - y * y,
+        ], axis=-1)
+    raise NotImplementedError(f"l={l}")
+
+
+def sh_jnp(l: int, u):
+    """Same basis evaluated with jnp (u: [..., 3] unit vectors)."""
+    import jax.numpy as jnp
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    if l == 0:
+        return jnp.ones_like(x)[..., None]
+    if l == 1:
+        return jnp.stack([x, y, z], axis=-1)
+    if l == 2:
+        return jnp.stack([
+            2 * x * y, 2 * y * z, (3 * z * z - 1.0) / np.sqrt(3.0), 2 * z * x,
+            x * x - y * y,
+        ], axis=-1)
+    raise NotImplementedError(f"l={l}")
+
+
+def random_rotation(rng=None) -> np.ndarray:
+    rng = rng or _rng
+    A = rng.normal(size=(3, 3))
+    Q, R = np.linalg.qr(A)
+    Q = Q * np.sign(np.diag(R))
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] = -Q[:, 0]
+    return Q
+
+
+def wigner_d(l: int, R: np.ndarray) -> np.ndarray:
+    """Numeric Wigner D in our real-SH basis: Y_l(R u) = D_l(R) @ Y_l(u)."""
+    n = 2 * l + 1
+    K = 4 * n
+    u = _rng.normal(size=(K, 3))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    A = sh(l, u)                       # [K, n]
+    B = sh(l, u @ R.T)                 # [K, n]
+    # B = A @ D^T  =>  D^T = lstsq(A, B)
+    Dt, *_ = np.linalg.lstsq(A, B, rcond=None)
+    return Dt.T
+
+
+@functools.lru_cache(maxsize=None)
+def real_cg(l1: int, l2: int, l3: int) -> np.ndarray:
+    """Real CG tensor C[(2l1+1), (2l2+1), (2l3+1)] for path l1 x l2 -> l3."""
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        raise ValueError(f"invalid triangle ({l1},{l2},{l3})")
+    n1, n2, n3 = 2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1
+    rows = []
+    for _ in range(8):
+        R = random_rotation()
+        D1 = wigner_d(l1, R)
+        D2 = wigner_d(l2, R)
+        D3 = wigner_d(l3, R)
+        # A1[(i',j',k0),(i,j,k)] = D1[i,i'] D2[j,j'] delta(k,k0)
+        A1 = np.einsum("ia,jb,kc->abcijk", D1, D2, np.eye(n3))
+        # A2[(i',j',k0),(i,j,k)] = delta(i,i') delta(j,j') D3[k0,k]
+        A2 = np.einsum("ai,bj,ck->abcijk", np.eye(n1), np.eye(n2), D3)
+        rows.append((A1 - A2).reshape(n1 * n2 * n3, n1 * n2 * n3))
+    M = np.concatenate(rows, axis=0)
+    _, s, vt = np.linalg.svd(M)
+    null_dim = int(np.sum(s < 1e-6 * max(s[0], 1.0)))
+    if null_dim < 1:
+        # parity-forbidden in this basis (e.g. 1x1->1 has the
+        # antisymmetric cross product — still dim 1; truly empty paths
+        # should not occur for l<=2 triangles)
+        raise RuntimeError(f"no equivariant map for ({l1},{l2},{l3})")
+    C = vt[-1].reshape(n1, n2, n3)
+    C /= np.linalg.norm(C)
+    # deterministic sign
+    flat = C.reshape(-1)
+    lead = flat[np.argmax(np.abs(flat))]
+    if lead < 0:
+        C = -C
+    return C.astype(np.float32)
+
+
+def paths(l_max: int):
+    """All admissible (l_in, l_f, l_out) triangles with every l <= l_max."""
+    out = []
+    for li in range(l_max + 1):
+        for lf in range(l_max + 1):
+            for lo in range(l_max + 1):
+                if abs(li - lf) <= lo <= li + lf:
+                    out.append((li, lf, lo))
+    return out

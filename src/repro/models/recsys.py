@@ -1,0 +1,324 @@
+"""RecSys archs: wide-deep, AutoInt, DIEN (AUGRU), SASRec.
+
+Shared substrate: sparse embedding tables (the hot path). JAX has no native
+EmbeddingBag or CSR sparse — lookups are ``jnp.take``-style gathers and bags
+are gather + masked segment-sum (`kernels/embed_bag` is the Pallas TPU
+version of the same op; the jnp path is what GSPMD partitions inside pjit).
+
+Every arch also exposes a retrieval tower (``user_repr`` -> dot-product
+against an item catalogue + top-k) — the `retrieval_cand` shape and the
+integration point for the paper's updatable ANN index (examples/
+recsys_retrieval.py serves the same scores through MN-RU HNSW).
+
+Sharding: tables row-sharded over 'model' (table parallelism), dense MLPs
+replicated, batch over ('pod','data').
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import RecSysConfig
+from .scan_ctl import scan_unroll
+
+
+def _lin(key, n_in, n_out):
+    return {"w": jax.random.normal(key, (n_in, n_out), jnp.float32)
+            / np.sqrt(n_in), "b": jnp.zeros((n_out,), jnp.float32)}
+
+
+def _apply(l, x):
+    return x @ l["w"] + l["b"]
+
+
+def _mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [_lin(k, dims[i], dims[i + 1]) for i, k in enumerate(ks)]
+
+
+def _mlp(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = _apply(l, x)
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def embed_bag_jnp(table, indices, mode="sum"):
+    """EmbeddingBag via take + masked sum (GSPMD-friendly path)."""
+    valid = indices >= 0
+    rows = table[jnp.clip(indices, 0)] * valid[..., None].astype(table.dtype)
+    out = jnp.sum(rows, axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(valid.sum(-1, keepdims=True), 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init / pspecs
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: RecSysConfig, key: jax.Array) -> Any:
+    ks = jax.random.split(key, 12)
+    D = cfg.embed_dim
+    scale = 0.05
+    p: dict = {"item_embed": jax.random.normal(ks[0], (cfg.items_padded, D),
+                                               jnp.float32) * scale}
+    if cfg.kind == "wide_deep":
+        p["tables"] = jax.random.normal(
+            ks[1], (cfg.n_sparse, cfg.vocab_size, D), jnp.float32) * scale
+        p["wide"] = jax.random.normal(ks[2], (cfg.vocab_size,),
+                                      jnp.float32) * scale
+        p["bag_table"] = jax.random.normal(ks[3], (cfg.vocab_size, D),
+                                           jnp.float32) * scale
+        in_dim = (cfg.n_sparse + 1) * D
+        p["mlp"] = _mlp_init(ks[4], (in_dim, *cfg.mlp, 1))
+        p["user_proj"] = _lin(ks[5], cfg.mlp[-1], D)
+    elif cfg.kind == "autoint":
+        p["tables"] = jax.random.normal(
+            ks[1], (cfg.n_sparse, cfg.vocab_size, D), jnp.float32) * scale
+        layers = []
+        d_in = D
+        for i in range(cfg.n_attn_layers):
+            k1, k2, k3, k4 = jax.random.split(ks[2 + i], 4)
+            H, da = cfg.n_heads, cfg.d_attn
+            layers.append({
+                "wq": jax.random.normal(k1, (d_in, H * da)) / np.sqrt(d_in),
+                "wk": jax.random.normal(k2, (d_in, H * da)) / np.sqrt(d_in),
+                "wv": jax.random.normal(k3, (d_in, H * da)) / np.sqrt(d_in),
+                "wres": jax.random.normal(k4, (d_in, H * da)) / np.sqrt(d_in),
+            })
+            d_in = H * da
+        p["attn_layers"] = layers
+        p["logit"] = _lin(ks[8], cfg.n_sparse * d_in, 1)
+        p["user_proj"] = _lin(ks[9], cfg.n_sparse * d_in, D)
+    elif cfg.kind == "dien":
+        G = cfg.gru_dim
+        p["gru"] = {k: jax.random.normal(kk, (D + G, G)) / np.sqrt(D + G)
+                    for k, kk in zip(("wz", "wr", "wh"),
+                                     jax.random.split(ks[1], 3))}
+        p["augru"] = {k: jax.random.normal(kk, (D + G, G)) / np.sqrt(D + G)
+                      for k, kk in zip(("wz", "wr", "wh"),
+                                       jax.random.split(ks[2], 3))}
+        p["attn"] = _lin(ks[3], G + D, 1)
+        p["mlp"] = _mlp_init(ks[4], (G + D, *cfg.mlp, 1))
+        p["user_proj"] = _lin(ks[5], G, D)
+    elif cfg.kind == "sasrec":
+        p["pos_embed"] = jax.random.normal(ks[1], (cfg.seq_len, D),
+                                           jnp.float32) * scale
+        blocks = []
+        for i in range(cfg.n_blocks):
+            k1, k2, k3, k4 = jax.random.split(ks[2 + i], 4)
+            blocks.append({
+                "wq": jax.random.normal(k1, (D, D)) / np.sqrt(D),
+                "wk": jax.random.normal(k2, (D, D)) / np.sqrt(D),
+                "wv": jax.random.normal(k3, (D, D)) / np.sqrt(D),
+                "ff": _mlp_init(k4, (D, D, D)),
+                "ln1": jnp.ones((D,)), "ln2": jnp.ones((D,)),
+            })
+        p["blocks"] = blocks
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def param_pspecs(cfg: RecSysConfig) -> Any:
+    params = init_params(
+        # tiny stand-in just for tree structure
+        cfg if cfg.vocab_size <= 1000 else
+        cfg.__class__(**{**cfg.__dict__, "vocab_size": 16, "n_items": 16}),
+        jax.random.PRNGKey(0))
+
+    def spec(path, leaf):
+        name = "/".join(str(getattr(pp, "key", getattr(pp, "idx", "")))
+                        for pp in path)
+        if "item_embed" in name:
+            # retrieval tower: rows over ALL axes — the retrieval_cand cell
+            # is a pure table-stream, so the memory floor scales with the
+            # full chip count, not just the model axis (§Perf iteration)
+            return P(("data", "model"), None)
+        if "bag_table" in name or name.startswith("wide"):
+            return P("model") if leaf.ndim == 1 else P("model", None)
+        if name.startswith("tables"):
+            return P(None, "model", None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# ---------------------------------------------------------------------------
+# forward per kind
+# ---------------------------------------------------------------------------
+
+def _field_lookup(tables, ids):
+    """tables [F, V, D], ids [B, F] -> [B, F, D]."""
+    F = tables.shape[0]
+    return tables[jnp.arange(F)[None, :], ids]
+
+
+def _wide_deep_forward(cfg, p, batch):
+    emb = _field_lookup(p["tables"], batch["sparse_ids"])        # [B, F, D]
+    bag = embed_bag_jnp(p["bag_table"], batch["bag_ids"])        # [B, D]
+    x = jnp.concatenate([emb.reshape(emb.shape[0], -1), bag], axis=-1)
+    hidden = x
+    for i, l in enumerate(p["mlp"][:-1]):
+        hidden = jax.nn.relu(_apply(l, hidden))
+    deep_logit = _apply(p["mlp"][-1], hidden)[:, 0]
+    wide_logit = jnp.sum(p["wide"][batch["sparse_ids"]], axis=-1)
+    user = _apply(p["user_proj"], hidden)
+    return deep_logit + wide_logit, user
+
+
+def _autoint_forward(cfg, p, batch):
+    x = _field_lookup(p["tables"], batch["sparse_ids"])          # [B, F, D]
+    H, da = cfg.n_heads, cfg.d_attn
+    for l in p["attn_layers"]:
+        B, F, d_in = x.shape
+        q = (x @ l["wq"]).reshape(B, F, H, da)
+        k = (x @ l["wk"]).reshape(B, F, H, da)
+        v = (x @ l["wv"]).reshape(B, F, H, da)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) / np.sqrt(da)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ l["wres"])
+    flat = x.reshape(x.shape[0], -1)
+    user = _apply(p["user_proj"], flat)
+    return _apply(p["logit"], flat)[:, 0], user
+
+
+def _gru_scan(w, xs, mask, h0, alphas=None):
+    """(AU)GRU over time. xs [B,T,D], mask [B,T]; alphas [B,T] for AUGRU."""
+    def cell(h, inp):
+        x, m, a = inp
+        xh = jnp.concatenate([x, h], axis=-1)
+        z = jax.nn.sigmoid(xh @ w["wz"])
+        r = jax.nn.sigmoid(xh @ w["wr"])
+        hh = jnp.tanh(jnp.concatenate([x, r * h], axis=-1) @ w["wh"])
+        if a is not None:
+            z = z * a[:, None]                     # attention-updated gate
+        hn = (1 - z) * h + z * hh
+        hn = jnp.where(m[:, None] > 0, hn, h)
+        return hn, hn
+
+    T = xs.shape[1]
+    a_seq = (jnp.moveaxis(alphas, 1, 0) if alphas is not None
+             else jnp.zeros((T,)) if False else None)
+    inp = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(mask, 1, 0),
+           a_seq if a_seq is not None else jnp.zeros((T, xs.shape[0])))
+    if alphas is None:
+        def cell0(h, inp):
+            x, m, _ = inp
+            return cell(h, (x, m, None))
+        hT, hs = jax.lax.scan(cell0, h0, inp, unroll=scan_unroll())
+    else:
+        hT, hs = jax.lax.scan(cell, h0, inp, unroll=scan_unroll())
+    return hT, jnp.moveaxis(hs, 0, 1)
+
+
+def _dien_forward(cfg, p, batch):
+    hist = p["item_embed"][jnp.clip(batch["hist_ids"], 0)]       # [B, T, D]
+    mask = (batch["hist_ids"] >= 0).astype(jnp.float32)
+    tgt = p["item_embed"][batch["target_id"]]                    # [B, D]
+    B = hist.shape[0]
+    h0 = jnp.zeros((B, cfg.gru_dim), jnp.float32)
+    _, states = _gru_scan(p["gru"], hist, mask, h0)              # [B, T, G]
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(tgt[:, None], (*states.shape[:2], tgt.shape[-1]))],
+        axis=-1)
+    scores = _apply(p["attn"], att_in)[..., 0]                   # [B, T]
+    scores = jnp.where(mask > 0, scores, -1e30)
+    alphas = jax.nn.softmax(scores, axis=-1)
+    hT, _ = _gru_scan(p["augru"], hist, mask, h0, alphas=alphas)
+    feat = jnp.concatenate([hT, tgt], axis=-1)
+    user = _apply(p["user_proj"], hT)
+    return _mlp(p["mlp"], feat)[:, 0], user
+
+
+def _sasrec_encode(cfg, p, seq_ids):
+    D = cfg.embed_dim
+    mask = seq_ids >= 0
+    x = p["item_embed"][jnp.clip(seq_ids, 0)] + p["pos_embed"]
+    x = x * mask[..., None]
+    T = seq_ids.shape[1]
+    causal = jnp.tril(jnp.ones((T, T), jnp.bool_))
+    for blk in p["blocks"]:
+        def ln(v, g):
+            mu = v.mean(-1, keepdims=True)
+            sd = jnp.sqrt(((v - mu) ** 2).mean(-1, keepdims=True) + 1e-6)
+            return (v - mu) / sd * g
+        h = ln(x, blk["ln1"])
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        s = jnp.einsum("btd,bsd->bts", q, k) / np.sqrt(D)
+        s = jnp.where(causal[None] & mask[:, None, :], s, -1e30)
+        x = x + jnp.einsum("bts,bsd->btd", jax.nn.softmax(s, -1), v)
+        h = ln(x, blk["ln2"])
+        x = x + _mlp(blk["ff"], h)
+    return x * mask[..., None]                                   # [B, T, D]
+
+
+def _sasrec_user(cfg, p, batch):
+    enc = _sasrec_encode(cfg, p, batch["seq_ids"])
+    return enc[:, -1]                                            # last state
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def forward(cfg: RecSysConfig, params, batch):
+    """Ranking logit [B] (+ user repr for retrieval)."""
+    if cfg.kind == "wide_deep":
+        return _wide_deep_forward(cfg, params, batch)
+    if cfg.kind == "autoint":
+        return _autoint_forward(cfg, params, batch)
+    if cfg.kind == "dien":
+        return _dien_forward(cfg, params, batch)
+    if cfg.kind == "sasrec":
+        enc = _sasrec_encode(cfg, params, batch["seq_ids"])
+        user = enc[:, -1]
+        logit = jnp.sum(user * params["item_embed"][batch["target_id"]], -1)
+        return logit, user
+    raise ValueError(cfg.kind)
+
+
+def loss_fn(cfg: RecSysConfig, params, batch):
+    if cfg.kind == "sasrec":
+        enc = _sasrec_encode(cfg, params, batch["seq_ids"])      # [B, T, D]
+        pos = params["item_embed"][jnp.clip(batch["pos_ids"], 0)]
+        neg = params["item_embed"][jnp.clip(batch["neg_ids"], 0)]
+        lp = jnp.sum(enc * pos, -1)
+        ln_ = jnp.sum(enc * neg, -1)
+        m = (batch["pos_ids"] >= 0).astype(jnp.float32)
+        loss = -jnp.sum((jax.nn.log_sigmoid(lp) +
+                         jax.nn.log_sigmoid(-ln_)) * m) / jnp.maximum(m.sum(), 1)
+        return loss, {"loss": loss}
+    logit, _ = forward(cfg, params, batch)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss, {"loss": loss}
+
+
+def user_repr(cfg: RecSysConfig, params, batch):
+    if cfg.kind == "sasrec":
+        return _sasrec_user(cfg, params, batch)
+    return forward(cfg, params, batch)[1]
+
+
+def retrieval_scores(cfg: RecSysConfig, params, batch, k: int = 100):
+    """Score user repr against the full item catalogue, return top-k.
+
+    This is the brute-force MXU path for `retrieval_cand`; the serving stack
+    can swap in the MN-RU HNSW index for sublinear + updatable retrieval.
+    """
+    u = user_repr(cfg, params, batch)                            # [B, D]
+    scores = u @ params["item_embed"].T                          # [B, items_padded]
+    if cfg.items_padded != cfg.n_items:
+        pad_mask = jnp.arange(cfg.items_padded) < cfg.n_items
+        scores = jnp.where(pad_mask, scores, -jnp.inf)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, idx

@@ -1,0 +1,30 @@
+"""Global scan-unroll switch for cost calibration.
+
+XLA's HLO cost analysis counts a ``while`` body ONCE, not trip-count times
+(verified empirically — see EXPERIMENTS.md §Dry-run). The dry-run therefore
+compiles two small fully-UNROLLED variants of each cell and extrapolates
+linearly in the trip count. This context flag flips every model scan
+(layers, GRU time steps) to ``unroll=True`` during those calibration
+compiles; production compiles keep rolled scans (small HLO, fast compile,
+same memory behaviour as the real deployment).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_UNROLL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "scan_unroll", default=False)
+
+
+def scan_unroll() -> bool:
+    return _UNROLL.get()
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)

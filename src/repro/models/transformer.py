@@ -1,0 +1,670 @@
+"""Dense + MoE decoder-only LM: GQA, RoPE, RMSNorm, SwiGLU, scan-over-layers.
+
+Covers all five assigned LM archs (granite-moe, deepseek-moe, codeqwen, yi,
+stablelm). MoE uses capacity-based sort dispatch (GShard-style) so compiled
+FLOPs track ACTIVE experts, not all experts — this keeps the dry-run roofline
+faithful to sparse execution.
+
+Sharding contract (see param_pspecs): batch over ('pod','data'); tensor
+parallel over 'model' (attention heads / FFN columns / vocab rows); MoE
+experts over 'model' when the expert count divides the axis (EP), else TP
+inside each expert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from .scan_ctl import scan_unroll
+
+Params = Any
+COMPUTE_DTYPE = jnp.bfloat16
+CE_CHUNK = 256          # sequence chunk for the memory-bounded CE loss
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: LMConfig, n_layers: int, d_ff: int):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    init = jax.nn.initializers.truncated_normal(0.02)
+    shp = lambda k, s: init(k, (n_layers, *s), COMPUTE_DTYPE)
+    return {
+        "attn_norm": jnp.ones((n_layers, D), jnp.float32),
+        "ffn_norm": jnp.ones((n_layers, D), jnp.float32),
+        "wq": shp(ks[0], (D, H * hd)),
+        "wk": shp(ks[1], (D, KV * hd)),
+        "wv": shp(ks[2], (D, KV * hd)),
+        "wo": shp(ks[3], (H * hd, D)),
+        "w_gate": shp(ks[4], (D, d_ff)),
+        "w_up": shp(ks[5], (D, d_ff)),
+        "w_down": shp(ks[6], (d_ff, D)),
+    }
+
+
+def _moe_layer_init(key, cfg: LMConfig, n_layers: int):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.d_ff
+    ks = jax.random.split(key, 9)
+    init = jax.nn.initializers.truncated_normal(0.02)
+    shp = lambda k, s: init(k, (n_layers, *s), COMPUTE_DTYPE)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "attn_norm": jnp.ones((n_layers, D), jnp.float32),
+        "ffn_norm": jnp.ones((n_layers, D), jnp.float32),
+        "wq": shp(ks[0], (D, H * hd)),
+        "wk": shp(ks[1], (D, KV * hd)),
+        "wv": shp(ks[2], (D, KV * hd)),
+        "wo": shp(ks[3], (H * hd, D)),
+        "router": init(ks[4], (n_layers, D, E), jnp.float32),
+        "we_gate": shp(ks[5], (E, D, F)),
+        "we_up": shp(ks[6], (E, D, F)),
+        "we_down": shp(ks[7], (E, F, D)),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.d_ff * cfg.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[8], 3)
+        p["ws_gate"] = init(k1, (n_layers, D, Fs), COMPUTE_DTYPE)
+        p["ws_up"] = init(k2, (n_layers, D, Fs), COMPUTE_DTYPE)
+        p["ws_down"] = init(k3, (n_layers, Fs, D), COMPUTE_DTYPE)
+    return p
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Params:
+    k_emb, k_head, k_dense, k_moe = jax.random.split(key, 4)
+    init = jax.nn.initializers.truncated_normal(0.02)
+    params = {
+        "embed": init(k_emb, (cfg.vocab_padded, cfg.d_model), COMPUTE_DTYPE),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": init(k_head, (cfg.d_model, cfg.vocab_padded), COMPUTE_DTYPE),
+    }
+    if cfg.moe:
+        n_moe = cfg.num_layers - cfg.first_dense_layers
+        if cfg.first_dense_layers:
+            params["dense_layers"] = _dense_layer_init(
+                k_dense, cfg, cfg.first_dense_layers, cfg.dense_ff)
+        params["layers"] = _moe_layer_init(k_moe, cfg, n_moe)
+    else:
+        params["layers"] = _dense_layer_init(k_dense, cfg, cfg.num_layers,
+                                             cfg.d_ff)
+    return params
+
+
+def param_pspecs(cfg: LMConfig) -> Params:
+    """PartitionSpecs matching init_params (TP over 'model')."""
+    dense = {
+        "attn_norm": P(), "ffn_norm": P(),
+        "wq": P(None, None, "model"), "wk": P(None, None, "model"),
+        "wv": P(None, None, "model"), "wo": P(None, "model", None),
+        "w_gate": P(None, None, "model"), "w_up": P(None, None, "model"),
+        "w_down": P(None, "model", None),
+    }
+    specs = {
+        "embed": P("model", None),
+        "final_norm": P(),
+        "lm_head": P(None, "model"),
+    }
+    if cfg.moe:
+        if cfg.moe_shard == "expert":
+            moe = {
+                "we_gate": P(None, "model", None, None),
+                "we_up": P(None, "model", None, None),
+                "we_down": P(None, "model", None, None),
+            }
+        else:  # TP inside each expert (expert count not divisible by axis)
+            moe = {
+                "we_gate": P(None, None, None, "model"),
+                "we_up": P(None, None, None, "model"),
+                "we_down": P(None, None, "model", None),
+            }
+        moe.update({
+            "attn_norm": P(), "ffn_norm": P(), "router": P(),
+            "wq": P(None, None, "model"), "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"), "wo": P(None, "model", None),
+        })
+        if cfg.num_shared_experts:
+            moe.update({"ws_gate": P(None, None, "model"),
+                        "ws_up": P(None, None, "model"),
+                        "ws_down": P(None, "model", None)})
+        specs["layers"] = moe
+        if cfg.first_dense_layers:
+            specs["dense_layers"] = dict(dense)
+    else:
+        specs["layers"] = dense
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * w).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (or [S]) absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [B, S, half]
+    cos = jnp.cos(ang)[..., None, :]                             # [B, S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+Q_CHUNK = 512   # query-block size for memory-bounded attention
+
+
+def _attn_core(qg: jax.Array, k: jax.Array, v: jax.Array,
+               positions: jax.Array, kv_positions: jax.Array,
+               causal: bool, hd: int) -> jax.Array:
+    """Dense attention over one query block. qg: [B, s, KV, G, hd]."""
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = positions[:, :, None] >= kv_positions[:, None, :]  # [B, s, T]
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", attn, v)               # [B,s,KV,G,hd]
+
+
+def gqa_attention(cfg: LMConfig, lp: dict, x: jax.Array,
+                  positions: jax.Array, kv: jax.Array | None = None,
+                  kv_positions: jax.Array | None = None,
+                  causal: bool = True, return_kv: bool = False):
+    """GQA attention. If ``kv`` is given it's ((k, v)) precomputed caches with
+    absolute ``kv_positions``; otherwise self-attention over ``x``.
+
+    For long sequences the query axis is processed in Q_CHUNK blocks inside a
+    checkpointed scan, so the [S, T] f32 score matrix is never materialised —
+    peak attention memory is [B, Q_CHUNK, T] per block (the XLA-level
+    equivalent of FlashAttention's outer loop; the Pallas inner loop is a
+    §Perf item, see EXPERIMENTS.md).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+
+    q = (x @ lp["wq"]).reshape(B, S, H, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    if kv is None:
+        k = (x @ lp["wk"]).reshape(B, S, KV, hd)
+        v = (x @ lp["wv"]).reshape(B, S, KV, hd)
+        k = rope(k, positions, cfg.rope_theta)
+        kv_positions = positions
+    else:
+        k, v = kv
+
+    qg = q.reshape(B, S, KV, G, hd)
+    if S <= Q_CHUNK or S % Q_CHUNK != 0:
+        o = _attn_core(qg, k, v, positions, kv_positions, causal, hd)
+    else:
+        n = S // Q_CHUNK
+        qs = jnp.moveaxis(qg.reshape(B, n, Q_CHUNK, KV, G, hd), 1, 0)
+        ps = jnp.moveaxis(positions.reshape(B, n, Q_CHUNK), 1, 0)
+
+        @partial(jax.checkpoint,
+                 policy=jax.checkpoint_policies.nothing_saveable)
+        def blk(carry, qp):
+            qc, pc = qp
+            return carry, _attn_core(qc, k, v, pc, kv_positions, causal, hd)
+
+        _, outs = jax.lax.scan(blk, jnp.float32(0), (qs, ps),
+                               unroll=scan_unroll())
+        o = jnp.moveaxis(outs, 0, 1).reshape(B, S, KV, G, hd)
+
+    o = o.reshape(B, S, H * hd)
+    out = o @ lp["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def swiglu(x, wg, wu, wd):
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+def _moe_route(cfg: LMConfig, router: jax.Array, x: jax.Array, C: int):
+    """Routing + capacity ranking over a token block x [T, D] (local)."""
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @ router)                    # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, topk_idx = jax.lax.top_k(probs, K)                    # [T, K]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # combine (and its [T, K, D] grad contraction) stays in compute dtype;
+    # keeping gates f32 here doubles the dispatch-buffer traffic in backward
+    gates = gates.astype(COMPUTE_DTYPE)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.mean(jax.nn.one_hot(topk_idx[:, 0], E), axis=0)
+    aux = E * jnp.sum(fe * me)
+
+    # rank of each assignment within its expert (sort-based)
+    flat_e = topk_idx.reshape(T * K)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * K) - starts[sorted_e]
+    rank = jnp.zeros((T * K,), jnp.int32).at[sort_idx].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    return flat_e, rank, keep, gates, aux
+
+
+def _expert_compute(lp, xe):
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, lp["we_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, lp["we_up"])
+    return jnp.einsum("ecf,efd->ecd", h, lp["we_down"])          # [E?, C, D]
+
+
+def _moe_apply(cfg: LMConfig, lp: dict, x: jax.Array, flat_e, rank, keep,
+               gates, E_loc: int, C: int, e_offset):
+    """Gather-based dispatch + expert FFN + combine over one token block.
+
+    The slot->token map is built with a 1-D int scatter (tiny); the [E*C, D]
+    dispatch buffer is then a row GATHER whose VJP is a single scatter-add —
+    the scatter-set formulation materialised several full-size f32/u32
+    buffers in backward (EXPERIMENTS.md §Perf granite iteration 2).
+    """
+    T, D = x.shape
+    K = cfg.top_k
+    local_e = flat_e - e_offset
+    mine = keep & (local_e >= 0) & (local_e < E_loc)
+    slot = jnp.where(mine, local_e * C + rank, E_loc * C)
+    assign_tok = jnp.arange(T * K, dtype=jnp.int32) // K
+    g = jnp.full((E_loc * C,), -1, jnp.int32).at[slot].set(
+        assign_tok, mode="drop")
+    ok = g >= 0
+    buf = jnp.where(ok[:, None], x[jnp.clip(g, 0)], 0)
+    ye = _expert_compute(lp, buf.reshape(E_loc, C, D))
+    y_slots = ye.reshape(E_loc * C, D)
+    y_tok = jnp.where(mine[:, None],
+                      y_slots[jnp.clip(slot, 0, E_loc * C - 1)], 0)
+    return jnp.sum(y_tok.reshape(T, K, D) * gates[..., None].astype(x.dtype),
+                   axis=1)
+
+
+def _moe_ffn_dense(cfg: LMConfig, lp: dict, x: jax.Array):
+    """Single-program dispatch path (smoke tests / 1-device)."""
+    T, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(int(T * K / E * cfg.capacity_factor), 1)
+    flat_e, rank, keep, gates, aux = _moe_route(cfg, lp["router"], x, C)
+    y = _moe_apply(cfg, lp, x, flat_e, rank, keep, gates, E, C,
+                   jnp.int32(0))
+    return y, aux
+
+
+def _moe_ffn_sharded(cfg: LMConfig, lp: dict, x: jax.Array, mesh):
+    """shard_map dispatch: per-data-shard LOCAL capacity ranking (no global
+    sort/scatter — GSPMD otherwise replicates the dispatch buffer and emits
+    terabyte all-reduces, see EXPERIMENTS.md §Perf granite iteration 1).
+
+    Tokens stay data-sharded and model-replicated; each model shard computes
+    its slice of experts (EP) or its slice of every expert's FFN (TP), and a
+    single psum over 'model' combines expert outputs — the same collective
+    pattern as Megatron TP, sized [T_local, D].
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes = dict(mesh.shape)
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    E, K, D = cfg.num_experts, cfg.top_k, cfg.d_model
+    T = x.shape[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= axes[a]
+    T_loc = T // dp_size
+    C = max(int(T_loc * K / E * cfg.capacity_factor), 1)
+    m_size = axes["model"]
+
+    if cfg.moe_shard == "expert":
+        e_specs = {"we_gate": P("model", None, None),
+                   "we_up": P("model", None, None),
+                   "we_down": P("model", None, None)}
+        E_loc = E // m_size
+    else:
+        e_specs = {"we_gate": P(None, None, "model"),
+                   "we_up": P(None, None, "model"),
+                   "we_down": P(None, "model", None)}
+        E_loc = E
+
+    weights = {k: lp[k] for k in ("we_gate", "we_up", "we_down")}
+    x_spec = P(dp if dp else None, None)
+
+    def local(x_loc, router, w):
+        flat_e, rank, keep, gates, aux = _moe_route(cfg, router, x_loc, C)
+        if cfg.moe_shard == "expert":
+            e0 = jax.lax.axis_index("model") * E_loc
+        else:
+            e0 = jnp.int32(0)
+        y = _moe_apply(cfg, w, x_loc, flat_e, rank, keep, gates, E_loc, C, e0)
+        y = jax.lax.psum(y, "model")           # combine expert/FFN slices
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(x_spec, P(), e_specs),
+                   out_specs=(x_spec, P()),
+                   check_rep=False)
+    return fn(x, lp["router"], weights)
+
+
+def moe_ffn(cfg: LMConfig, lp: dict, x: jax.Array):
+    """Capacity-based sort dispatch. x: [T, D] tokens -> (y, aux_loss).
+
+    Uses the shard_map path when a production mesh is in scope (see
+    dist_ctx) and token count divides the data axes; else the dense path.
+    """
+    from . import dist_ctx
+    mesh = dist_ctx.current_mesh()
+    use_sharded = False
+    if mesh is not None and "model" in dict(mesh.shape):
+        axes = dict(mesh.shape)
+        dp_size = 1
+        for a in ("pod", "data"):
+            dp_size *= axes.get(a, 1)
+        m = axes["model"]
+        div_ok = (cfg.num_experts % m == 0 if cfg.moe_shard == "expert"
+                  else cfg.d_ff % m == 0)
+        use_sharded = (x.shape[0] % dp_size == 0
+                       and x.shape[0] >= dp_size and div_ok)
+    if use_sharded:
+        y, aux = _moe_ffn_sharded(cfg, lp, x, mesh)
+    else:
+        y, aux = _moe_ffn_dense(cfg, lp, x)
+    if cfg.num_shared_experts:
+        y = y + swiglu(x, lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _block(cfg: LMConfig, lp: dict, x: jax.Array, positions: jax.Array,
+           moe: bool, return_kv: bool = False):
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    att = gqa_attention(cfg, lp, h, positions, return_kv=return_kv)
+    if return_kv:
+        att, kv = att
+    x = x + att
+    h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+    if moe:
+        B, S, D = h.shape
+        y, aux = moe_ffn(cfg, lp, h.reshape(B * S, D))
+        out = x + y.reshape(B, S, D)
+    else:
+        out, aux = x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]), jnp.float32(0)
+    if return_kv:
+        return out, aux, kv
+    return out, aux
+
+
+def forward_hidden(cfg: LMConfig, params: Params, tokens: jax.Array,
+                   remat: bool = False, act_spec: P | None = None):
+    """tokens [B, S] -> (final hidden [B, S, D] (normed), aux_loss).
+
+    ``remat=True`` checkpoints each layer (recompute-in-backward): the scan
+    then carries only the [B, S, D] hidden state per layer instead of the
+    full attention/FFN residuals — this is what makes train_4k fit HBM.
+
+    ``act_spec`` (sequence parallelism): the per-layer saved carry is
+    sharding-constrained — typically P(dp, 'model', None), i.e. the sequence
+    axis sharded over the tensor-parallel axis between blocks. Without it the
+    L x [B, S, D] residual stack is REPLICATED across the model axis (16x
+    memory at 16-way TP). GSPMD inserts the all-gather on entry to each block
+    (Megatron-SP).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.float32(0)
+
+    def wrap(f):
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.nothing_saveable) if remat else f
+
+    def constrain(x):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, act_spec)
+        return x
+
+    x = constrain(x)
+    if cfg.moe and cfg.first_dense_layers:
+        @wrap
+        def dense_block(x, lp):
+            return _block(cfg, lp, x, positions, moe=False)
+
+        def dense_body(carry, lp):
+            x, aux = carry
+            x, a = dense_block(x, lp)
+            return (constrain(x), aux + a), None
+        (x, aux_total), _ = jax.lax.scan(dense_body, (x, aux_total),
+                                         params["dense_layers"],
+                                         unroll=scan_unroll())
+
+    @wrap
+    def block(x, lp):
+        return _block(cfg, lp, x, positions, moe=cfg.moe)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block(x, lp)
+        return (constrain(x), aux + a), None
+
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"],
+                                     unroll=scan_unroll())
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def forward(cfg: LMConfig, params: Params, tokens: jax.Array,
+            remat: bool = False):
+    """tokens [B, S] -> (logits [B, S, V] f32, aux_loss)."""
+    x, aux_total = forward_hidden(cfg, params, tokens, remat)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits[..., :cfg.vocab_size], aux_total
+
+
+def prefill(cfg: LMConfig, params: Params, tokens: jax.Array):
+    """Inference prefill: build the KV cache, return last-position logits.
+
+    tokens [B, S] -> (logits [B, V] f32, cache {k, v: [L, B, S, KV, hd]}).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    kvs = []
+    if cfg.moe and cfg.first_dense_layers:
+        def dense_body(x, lp):
+            x, _, kv = _block(cfg, lp, x, positions, moe=False, return_kv=True)
+            return x, kv
+        x, kv_d = jax.lax.scan(dense_body, x, params["dense_layers"],
+                                unroll=scan_unroll())
+        kvs.append(kv_d)
+
+    def body(x, lp):
+        x, _, kv = _block(cfg, lp, x, positions, moe=cfg.moe, return_kv=True)
+        return x, kv
+
+    x, kv_m = jax.lax.scan(body, x, params["layers"],
+                            unroll=scan_unroll())
+    kvs.append(kv_m)
+    k_all = jnp.concatenate([kv[0] for kv in kvs], axis=0)
+    v_all = jnp.concatenate([kv[1] for kv in kvs], axis=0)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    return logits[:, :cfg.vocab_size], {"k": k_all, "v": v_all}
+
+
+def _ce_chunk(cfg: LMConfig, lm_head: jax.Array, h: jax.Array,
+              t: jax.Array) -> jax.Array:
+    """CE over one sequence chunk, vocab-sharding-friendly.
+
+    logsumexp (partial reduce over the sharded vocab + tiny all-reduce) minus
+    a one-hot contraction — never gathers log-probs across the model axis.
+    """
+    logits = (h @ lm_head).astype(jnp.float32)                   # [B, c, Vp]
+    if cfg.vocab_padded != cfg.vocab_size:                       # mask padding
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # picked logit via a column gather of lm_head ([B, c, D] not [B, c, V])
+    w_t = jnp.moveaxis(lm_head, 0, 1)[t]                         # [B, c, D]
+    picked = jnp.einsum("bsd,bsd->bs", h.astype(jnp.float32),
+                        w_t.astype(jnp.float32))
+    return jnp.sum(lse - picked)
+
+
+def lm_loss(cfg: LMConfig, params: Params, tokens: jax.Array,
+            remat: bool = True, act_spec: P | None = None):
+    """tokens [B, S+1]: causal LM loss (mean over tokens) + MoE aux.
+
+    The CE is computed over sequence CHUNKS inside a checkpointed scan, so
+    the full [B, S, V] logits tensor is never materialised (forward OR
+    backward) — the dominant memory term at 100k-vocab scale.
+    """
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    B, S = inputs.shape
+    x, aux = forward_hidden(cfg, params, inputs, remat=remat,
+                            act_spec=act_spec)
+
+    if S % CE_CHUNK != 0 or S <= CE_CHUNK:
+        total = _ce_chunk(cfg, params["lm_head"], x, targets)
+    else:
+        n = S // CE_CHUNK
+        hs = jnp.moveaxis(x.reshape(B, n, CE_CHUNK, -1), 1, 0)
+        ts = jnp.moveaxis(targets.reshape(B, n, CE_CHUNK), 1, 0)
+
+        @partial(jax.checkpoint,
+                 policy=jax.checkpoint_policies.nothing_saveable)
+        def chunk_body(acc, ht):
+            h, t = ht
+            return acc + _ce_chunk(cfg, params["lm_head"], h, t), None
+
+        total, _ = jax.lax.scan(chunk_body, jnp.float32(0), (hs, ts),
+                                unroll=scan_unroll())
+    loss = total / (B * S)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (cfg.num_layers, batch, max_len, KV, hd)
+    return {"k": jnp.zeros(shape, COMPUTE_DTYPE),
+            "v": jnp.zeros(shape, COMPUTE_DTYPE)}
+
+
+def decode_step(cfg: LMConfig, params: Params, cache: dict,
+                token: jax.Array, pos: jax.Array):
+    """One decode step. token [B], pos [B] current positions.
+
+    cache k/v: [L, B, T, KV, hd]. Returns (logits [B, V], new cache).
+    """
+    B = token.shape[0]
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    x = params["embed"][token][:, None, :]                       # [B, 1, D]
+    positions = pos[:, None]                                     # [B, 1]
+    Tmax = cache["k"].shape[2]
+    kv_positions = jnp.broadcast_to(jnp.arange(Tmax), (B, Tmax))
+
+    n_dense = cfg.first_dense_layers if cfg.moe else 0
+
+    def one_layer(x, lp, ck, cv, moe):
+        h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+        k_new = (h @ lp["wk"]).reshape(B, 1, KV, hd)
+        v_new = (h @ lp["wv"]).reshape(B, 1, KV, hd)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        ck = jax.vmap(lambda c, kn, p: jax.lax.dynamic_update_slice(
+            c, kn, (p, 0, 0)))(ck, k_new, pos)
+        cv = jax.vmap(lambda c, vn, p: jax.lax.dynamic_update_slice(
+            c, vn, (p, 0, 0)))(cv, v_new, pos)
+        # mask: only positions <= pos are valid
+        att = gqa_attention(cfg, lp, h, positions, kv=(ck, cv),
+                            kv_positions=kv_positions, causal=True)
+        x = x + att
+        h = rmsnorm(x, lp["ffn_norm"], cfg.norm_eps)
+        if moe:
+            y, _ = moe_ffn(cfg, lp, h.reshape(B, -1))
+            x = x + y.reshape(B, 1, -1)
+        else:
+            x = x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        return x, ck, cv
+
+    # The FULL cache rides in the scan carry and is updated in place with
+    # dynamic_update_index_in_dim — no stacked-ys second cache buffer, so the
+    # donated input buffer can be reused (EXPERIMENTS.md §Perf decode iter).
+    def body_for(moe):
+        def body(carry, lp):
+            x, ck_full, cv_full, li = carry
+            ck = jax.lax.dynamic_index_in_dim(ck_full, li, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_full, li, 0, keepdims=False)
+            x, ck, cv = one_layer(x, lp, ck, cv, moe=moe)
+            ck_full = jax.lax.dynamic_update_index_in_dim(ck_full, ck, li, 0)
+            cv_full = jax.lax.dynamic_update_index_in_dim(cv_full, cv, li, 0)
+            return (x, ck_full, cv_full, li + 1), None
+        return body
+
+    carry = (x, cache["k"], cache["v"], jnp.int32(0))
+    if n_dense:
+        carry, _ = jax.lax.scan(body_for(False), carry,
+                                params["dense_layers"],
+                                unroll=scan_unroll())
+    carry, _ = jax.lax.scan(body_for(cfg.moe), carry, params["layers"],
+                            unroll=scan_unroll())
+    x_cur, k_all, v_all, _ = carry
+
+    x_out = rmsnorm(x_cur, params["final_norm"], cfg.norm_eps)
+    logits = (x_out[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    return logits[:, :cfg.vocab_size], {"k": k_all, "v": v_all}
+
+
+def cache_pspecs(cfg: LMConfig, mesh_axes: dict, batch: int, T: int) -> dict:
+    """KV-cache sharding adapted to the mesh.
+
+    batch divisible -> batch over ('pod','data'), time over 'model'
+    (sequence-parallel decode: GSPMD inserts the partial-softmax
+    collectives). batch=1 (long-context) -> the data axes are idle, so the
+    time axis is sharded over ALL axes — this is what makes a 512k-token MHA
+    cache fit per-device HBM.
+    """
+    import numpy as np
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    dp_size = int(np.prod([mesh_axes[a] for a in dp])) if dp else 1
+    all_ax = tuple(a for a in ("pod", "data", "model") if a in mesh_axes)
+    all_size = int(np.prod([mesh_axes[a] for a in all_ax])) if all_ax else 1
+    m = mesh_axes.get("model", 0)
+
+    if dp and batch > 1 and batch % dp_size == 0:
+        if m and T % m == 0:
+            spec = P(None, dp, "model", None, None)
+        elif m and cfg.num_kv_heads % m == 0:
+            spec = P(None, dp, None, "model", None)
+        else:
+            spec = P(None, dp, None, None, None)
+    elif all_ax and T % all_size == 0:
+        spec = P(None, None, all_ax, None, None)
+    else:
+        spec = P(None, None, None, None, None)
+    return {"k": spec, "v": spec}

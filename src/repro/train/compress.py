@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two schemes, both with EF memory so compression error doesn't bias SGD:
+
+  * ``topk``: keep the top rho-fraction of gradient entries by magnitude
+    (per-leaf), rest accumulate in the error buffer (Stich et al., 2018);
+  * ``int8``: per-leaf symmetric int8 quantisation with EF residual.
+
+Applied BEFORE the data-parallel all-reduce in the train loop (the
+cross-replica sum then moves rho x bytes). On the dry-run mesh this shows up
+as a smaller all-reduce operand in the collective-bytes term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    scheme: str = "none"          # none | topk | int8
+    topk_frac: float = 0.05
+
+
+def compress_init(params: Any) -> Any:
+    """Error-feedback buffers, shaped like the grads (f32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_leaf(g: jax.Array, frac: float):
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0)
+    return kept.reshape(g.shape), (flat - kept.reshape(-1)).reshape(g.shape)
+
+
+def _int8_leaf(g: jax.Array):
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def compressed_grads(cfg: CompressorConfig, grads: Any, ef: Any):
+    """Returns (compressed_grads, new_error_buffers)."""
+    if cfg.scheme == "none":
+        return grads, ef
+
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        if cfg.scheme == "topk":
+            out, res = _topk_leaf(acc, cfg.topk_frac)
+        elif cfg.scheme == "int8":
+            out, res = _int8_leaf(acc)
+        else:
+            raise ValueError(cfg.scheme)
+        return out.astype(g.dtype), res
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+            jax.tree.unflatten(treedef, [o[1] for o in outs]))

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override is exclusively for launch/dryrun.py)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import HNSWParams, build
+from repro.data import clustered_vectors
+
+
+@pytest.fixture(scope="session")
+def small_params():
+    return HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                      ef_search=48)
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    return clustered_vectors(600, 16, n_clusters=8, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_params, small_data):
+    return build(small_params, jnp.asarray(small_data))

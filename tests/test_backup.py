@@ -1,0 +1,57 @@
+"""Backup index + dualSearch (paper Algorithm 1 / Fig. 4)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (HNSWParams, DualIndexManager, batch_dual_search,
+                        batch_knn, build, dual_search, empty_index,
+                        rebuild_backup)
+from repro.core.index import HNSWIndex
+from repro.data import clustered_vectors
+
+
+def _sever(index, slot):
+    """Cut every in-edge of ``slot`` to manufacture an unreachable point."""
+    nbrs = np.asarray(index.neighbors).copy()
+    nbrs[nbrs == slot] = -1
+    return HNSWIndex(index.vectors, index.labels, index.levels,
+                     jnp.asarray(nbrs), index.deleted, index.entry,
+                     index.max_layer, index.count, index.rng)
+
+
+def test_dual_search_recovers_unreachable(small_params, small_index,
+                                          small_data):
+    victim = 123
+    idx = _sever(small_index, victim)
+    q = jnp.asarray(small_data[victim])
+
+    labels_main, _, _ = batch_knn(small_params, idx, q[None], 1)
+    assert int(labels_main[0, 0]) != victim          # main index lost it
+
+    backup = rebuild_backup(small_params, idx, 64, jnp.uint32(1))
+    assert int(backup.count) >= 1
+
+    labels, dists = dual_search(small_params, idx, small_params, backup, q, 1)
+    assert int(labels[0]) == victim                  # dualSearch recovers it
+
+
+def test_dual_search_dedups_labels(small_params, small_index, small_data):
+    """A point present in both indexes appears once in merged results."""
+    backup = rebuild_backup(small_params, small_index, 64, jnp.uint32(1))
+    q = jnp.asarray(small_data[0])
+    labels, dists = dual_search(small_params, small_index, small_params,
+                                backup, q, 10)
+    lab = [int(l) for l in np.asarray(labels) if l >= 0]
+    assert len(lab) == len(set(lab))
+
+
+def test_manager_tau_trigger(small_params):
+    X = clustered_vectors(200, 8, seed=0)
+    index = build(small_params, jnp.asarray(X))
+    mgr = DualIndexManager(small_params, index, tau=10, backup_capacity=32)
+    for i in range(10):
+        mgr.mark_delete(i)
+        mgr.replaced_update(
+            jnp.asarray(clustered_vectors(1, 8, seed=50 + i)[0]), 500 + i)
+    assert mgr._rebuilds == 1
+    labels, dists = mgr.search(jnp.asarray(X[:4]), 3)
+    assert labels.shape == (4, 3)

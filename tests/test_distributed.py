@@ -1,0 +1,55 @@
+"""Multi-device sharded-index tests (subprocess: needs its own XLA_FLAGS)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.core import HNSWParams, batch_knn
+from repro.core.distributed import (build_sharded, shard_index,
+                                    sharded_batch_knn, sharded_update)
+from repro.data import brute_force_knn, clustered_vectors
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((8,), ("data",))
+params = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                    ef_search=48)
+X = clustered_vectors(800, 16, seed=0)
+stacked = build_sharded(params, jnp.asarray(X), nshards=8)
+stacked = shard_index(stacked, mesh, "data")
+
+Q = clustered_vectors(32, 16, seed=1)
+labels, dists = sharded_batch_knn(params, stacked, jnp.asarray(Q), 10, mesh)
+gt = brute_force_knn(X, Q, 10)
+rec = np.mean([len(set(np.asarray(labels[i]).tolist()) & set(gt[i].tolist())) / 10
+               for i in range(32)])
+assert rec > 0.9, rec
+print("sharded recall", rec)
+
+# routed update: delete label 3, insert new label 803 (owner = 803 % 8 = 3)
+xnew = jnp.asarray(clustered_vectors(1, 16, seed=2)[0])
+stacked2 = sharded_update(params, stacked, jnp.int32(3), xnew,
+                          jnp.int32(803), mesh)
+labels2, _ = sharded_batch_knn(params, stacked2, xnew[None], 1, mesh)
+assert int(labels2[0, 0]) == 803, labels2
+# label 3 no longer returned for its own vector
+l3, _ = sharded_batch_knn(params, stacked2, jnp.asarray(X[3])[None], 5, mesh)
+assert 3 not in np.asarray(l3[0]).tolist()
+print("routed update OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_index_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "routed update OK" in r.stdout

@@ -1,0 +1,41 @@
+"""HLO collective-traffic parser unit tests."""
+from repro.launch.hlo_stats import collective_stats, shape_bytes
+
+
+def test_shape_bytes_tuple():
+    assert shape_bytes("(f32[8,4]{1,0}, bf16[16]{0})") == 8 * 4 * 4 + 16 * 2
+    assert shape_bytes("f32[]") == 4
+    assert shape_bytes("token[]") == 0
+
+
+HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %p1 = f32[64,128]{1,0} parameter(1)
+  %ar = f32[64,128]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[1024,128]{1,0} all-gather(%p1), dimensions={0}
+  %ars = f32[64,128]{1,0} all-reduce-start(%p0)
+  %ard = f32[64,128]{1,0} all-reduce-done(%ars)
+  %rs = f32[4,128]{1,0} reduce-scatter(%p0), dimensions={0}
+  %cp = f32[64,128]{1,0} collective-permute(%p1)
+  ROOT %out = f32[64,128]{1,0} add(%ar, %cp)
+}
+"""
+
+
+def test_collective_stats_categories():
+    s = collective_stats(HLO)
+    b = 64 * 128 * 4
+    assert s["all-reduce"]["count"] == 2          # plain + start (done skipped)
+    assert s["all-reduce"]["bytes"] == 2 * b
+    assert s["all-gather"]["count"] == 1
+    assert s["all-gather"]["bytes"] == b          # operand, not result
+    assert s["reduce-scatter"]["bytes"] == b
+    assert s["collective-permute"]["count"] == 1
+    assert s["total_count"] == 5
+
+
+def test_no_collectives():
+    s = collective_stats("ENTRY %e { ROOT %x = f32[2]{0} parameter(0) }")
+    assert s["total_bytes"] == 0

@@ -1,0 +1,78 @@
+"""Core HNSW behaviour: build, search, structural invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (HNSWParams, batch_knn, build, insert_jit, knn_search,
+                        empty_index)
+from repro.data import brute_force_knn, clustered_vectors
+
+
+def test_recall_vs_bruteforce(small_params, small_data, small_index):
+    Q = clustered_vectors(50, 16, n_clusters=8, seed=1)
+    labels, ids, dists = batch_knn(small_params, small_index,
+                                   jnp.asarray(Q), 10)
+    gt = brute_force_knn(small_data, Q, 10)
+    rec = np.mean([len(set(np.asarray(labels[i])) & set(gt[i])) / 10
+                   for i in range(50)])
+    assert rec > 0.9, rec
+
+
+def test_degree_bounds(small_params, small_index):
+    """No node exceeds the per-layer degree cap; all edges point at valid slots."""
+    nbrs = np.asarray(small_index.neighbors)
+    levels = np.asarray(small_index.levels)
+    L, N, M0 = nbrs.shape
+    for layer in range(L):
+        deg = (nbrs[layer] >= 0).sum(1)
+        cap = small_params.m_for_layer(layer)
+        assert deg.max() <= cap, (layer, deg.max(), cap)
+        # nodes below this layer have no edges here
+        absent = levels < layer
+        assert deg[absent].max(initial=0) == 0
+        # edges target existing nodes at this layer or above
+        tgts = nbrs[layer][nbrs[layer] >= 0]
+        assert (levels[tgts] >= layer).all()
+
+
+def test_no_self_edges_no_dups(small_index):
+    nbrs = np.asarray(small_index.neighbors)
+    L, N, M0 = nbrs.shape
+    for layer in range(L):
+        for n in range(N):
+            row = nbrs[layer, n]
+            row = row[row >= 0]
+            assert n not in row, (layer, n)
+            assert len(set(row.tolist())) == len(row)
+
+
+def test_dists_sorted_and_consistent(small_params, small_index, small_data):
+    q = jnp.asarray(clustered_vectors(1, 16, seed=3)[0])
+    labels, ids, dists = knn_search(small_params, small_index, q, 10)
+    d = np.asarray(dists)
+    assert (np.diff(d[np.isfinite(d)]) >= -1e-6).all()
+    # distances match recompute
+    ids_np = np.asarray(ids)
+    for i, pid in enumerate(ids_np):
+        if pid >= 0:
+            ref = ((small_data[pid] - np.asarray(q)) ** 2).sum()
+            assert abs(ref - d[i]) < 1e-3
+
+
+def test_incremental_insert_matches_build(small_params):
+    X = clustered_vectors(128, 8, seed=5)
+    idx = empty_index(small_params, 128, 8, seed=0)
+    for i in range(128):
+        idx = insert_jit(small_params, idx, jnp.asarray(X[i]), i, i)
+    labels, _, _ = batch_knn(small_params, idx, jnp.asarray(X[:20]), 1)
+    # self-recall: each point finds itself
+    assert (np.asarray(labels)[:, 0] == np.arange(20)).mean() > 0.95
+
+
+def test_empty_and_single_point(small_params):
+    idx = empty_index(small_params, 8, 4, seed=0)
+    idx = insert_jit(small_params, idx, jnp.ones(4), 0, 42)
+    labels, ids, dists = knn_search(small_params, idx, jnp.ones(4), 3)
+    assert int(labels[0]) == 42
+    assert int(idx.count) == 1

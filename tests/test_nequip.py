@@ -1,0 +1,112 @@
+"""E(3) equivariance of the NequIP stack — the defining property."""
+from functools import partial
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import gnn_batch
+from repro.models import nequip
+from repro.models.e3 import paths, random_rotation, real_cg, wigner_d
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("nequip")
+    params = nequip.init_params(cfg, jax.random.PRNGKey(0))
+    b = gnn_batch(cfg, 40, 120, 0, n_graphs=2)
+    batch = {k: (jnp.asarray(v) if k != "n_graphs" else v)
+             for k, v in b.items()}
+    return cfg, params, batch
+
+
+def test_rotation_invariance(setup):
+    cfg, params, batch = setup
+    e0 = nequip.forward(cfg, params, batch)
+    for seed in range(3):
+        R = jnp.asarray(random_rotation(np.random.default_rng(seed)),
+                        jnp.float32)
+        b2 = {**batch, "positions": batch["positions"] @ R.T}
+        e1 = nequip.forward(cfg, params, b2)
+        np.testing.assert_allclose(e0, e1, rtol=2e-3, atol=1e-3)
+
+
+def test_translation_invariance(setup):
+    cfg, params, batch = setup
+    e0 = nequip.forward(cfg, params, batch)
+    b2 = {**batch, "positions": batch["positions"] + jnp.asarray([5., -3., 1.])}
+    e1 = nequip.forward(cfg, params, b2)
+    np.testing.assert_allclose(e0, e1, rtol=2e-3, atol=1e-3)
+
+
+def test_permutation_invariance(setup):
+    cfg, params, batch = setup
+    e0 = nequip.forward(cfg, params, batch)
+    n = batch["positions"].shape[0]
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(n)
+    inv = np.argsort(perm)
+    b2 = dict(batch)
+    for k in ("positions", "species", "node_mask", "graph_id"):
+        b2[k] = batch[k][perm]
+    b2["src"] = jnp.asarray(inv)[batch["src"]]
+    b2["dst"] = jnp.asarray(inv)[batch["dst"]]
+    e1 = nequip.forward(cfg, params, b2)
+    np.testing.assert_allclose(e0, e1, rtol=1e-4, atol=1e-4)
+
+
+def test_forces_equivariance(setup):
+    """Forces rotate WITH the system: F(Rx) = R F(x)."""
+    cfg, params, batch = setup
+    _, f0 = nequip.energy_and_forces(cfg, params, batch)
+    R = jnp.asarray(random_rotation(np.random.default_rng(5)), jnp.float32)
+    b2 = {**batch, "positions": batch["positions"] @ R.T}
+    _, f1 = nequip.energy_and_forces(cfg, params, b2)
+    np.testing.assert_allclose(np.asarray(f0 @ R.T), np.asarray(f1),
+                               rtol=5e-3, atol=1e-3)
+
+
+def test_cg_orthogonality():
+    """CG tensors for distinct output l are orthogonal subspaces."""
+    for (l1, l2) in [(1, 1), (2, 1), (2, 2)]:
+        ls = [l for l in range(3) if abs(l1 - l2) <= l <= l1 + l2]
+        Cs = [real_cg(l1, l2, l).reshape(-1, 2 * l + 1) for l in ls]
+        for i in range(len(ls)):
+            for j in range(i + 1, len(ls)):
+                G = Cs[i].T @ Cs[j]
+                assert np.abs(G).max() < 1e-6, (l1, l2, ls[i], ls[j])
+
+
+def test_wigner_d_is_orthogonal():
+    R = random_rotation(np.random.default_rng(9))
+    for l in range(3):
+        D = wigner_d(l, R)
+        np.testing.assert_allclose(D @ D.T, np.eye(2 * l + 1), atol=1e-8)
+
+
+def test_gradients_flow(setup):
+    cfg, params, batch = setup
+    def loss(p):
+        return nequip.loss_fn(cfg, p, batch)[0]
+    g = jax.grad(loss)(params)
+    total = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0
+
+
+def test_neighbor_sampler():
+    from repro.models.gnn_common import sample_subgraph, to_csr
+    rng = np.random.default_rng(0)
+    n, e = 200, 2000
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    indptr, indices = to_csr(n, src, dst)
+    seeds = jnp.arange(10, dtype=jnp.int32)
+    s, d = sample_subgraph(jax.random.PRNGKey(0), indptr, indices, seeds,
+                           (5, 3))
+    assert s.shape == (10 * 5 + 50 * 3,)
+    # every sampled edge exists in the original graph (or is a self-loop)
+    es = set(zip(src.tolist(), dst.tolist()))
+    for a, b in zip(np.asarray(s)[:50], np.asarray(d)[:50]):
+        assert (int(a), int(b)) in es or int(a) == int(b)

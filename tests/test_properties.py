@@ -1,0 +1,108 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.common import dedup_ids, pairwise_sqdist, topk_by_distance
+from repro.core.prune import select_neighbors
+from repro.kernels.embed_bag.ref import embed_bag_ref
+from repro.launch.hlo_stats import shape_bytes
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+@given(st.lists(st.integers(-1, 20), min_size=1, max_size=32))
+def test_dedup_ids_properties(ids_list):
+    ids = jnp.asarray(ids_list, jnp.int32)
+    dists = jnp.asarray(np.arange(len(ids_list), dtype=np.float32))
+    out_ids, out_d = dedup_ids(ids, dists)
+    kept = [int(i) for i in np.asarray(out_ids) if i >= 0]
+    # no duplicates among kept
+    assert len(kept) == len(set(kept))
+    # every distinct valid input id survives exactly once
+    want = set(i for i in ids_list if i >= 0)
+    assert set(kept) == want
+    # entries invalidated BY dedup get INF distance
+    newly_invalid = (np.asarray(out_ids) < 0) & (np.asarray(ids_list) >= 0)
+    assert np.isinf(np.asarray(out_d)[newly_invalid]).all()
+
+
+@given(st.integers(2, 24), st.integers(1, 12), st.integers(0, 1000),
+       st.floats(1.0, 1.3))
+def test_select_neighbors_properties(C, m_out, seed, alpha):
+    rng = np.random.default_rng(seed)
+    vecs = jnp.asarray(rng.normal(size=(C, 4)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=4), jnp.float32)
+    ids = jnp.asarray(rng.choice(1000, C, replace=False).astype(np.int32))
+    dists = jnp.sum((vecs - q) ** 2, axis=1)
+    sel, seld = select_neighbors(q, ids, vecs, dists, m_out, alpha)
+    sel_np = np.asarray(sel)
+    valid = sel_np[sel_np >= 0]
+    # bounded count, unique, all from the candidate set
+    assert len(valid) <= m_out
+    assert len(set(valid.tolist())) == len(valid)
+    assert set(valid.tolist()) <= set(np.asarray(ids).tolist())
+    # nearest candidate is always selected
+    if len(valid):
+        nearest = int(np.asarray(ids)[np.argmin(np.asarray(dists))])
+        assert valid[0] == nearest
+    # output distances ascending
+    d = np.asarray(seld)
+    d = d[np.isfinite(d)]
+    assert (np.diff(d) >= -1e-6).all()
+
+
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(0, 100))
+def test_pairwise_sqdist_matches_numpy(n, m, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, 5)).astype(np.float32)
+    B = rng.normal(size=(m, 5)).astype(np.float32)
+    D = np.asarray(pairwise_sqdist(jnp.asarray(A), jnp.asarray(B)))
+    ref = ((A[:, None] - B[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(D, ref, rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(1, 30), st.integers(1, 10), st.integers(0, 50))
+def test_topk_by_distance(n, k, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=n).astype(np.float32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    out_i, out_d = topk_by_distance(ids, jnp.asarray(d), min(k, n))
+    ref = np.sort(d)[:min(k, n)]
+    np.testing.assert_allclose(np.asarray(out_d), ref, rtol=1e-6)
+
+
+@given(st.integers(2, 64), st.integers(1, 16), st.integers(1, 8),
+       st.integers(0, 20))
+def test_embed_bag_linear_in_table(v, b, l, seed):
+    """EmbeddingBag is linear: bag(t1 + t2) == bag(t1) + bag(t2)."""
+    rng = np.random.default_rng(seed)
+    t1 = jnp.asarray(rng.normal(size=(v, 4)), jnp.float32)
+    t2 = jnp.asarray(rng.normal(size=(v, 4)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, v, size=(b, l)).astype(np.int32))
+    lhs = embed_bag_ref(t1 + t2, idx)
+    rhs = embed_bag_ref(t1, idx) + embed_bag_ref(t2, idx)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@given(st.sampled_from(["f32", "bf16", "s32", "u8", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=3))
+def test_shape_bytes_parser(dtype, dims):
+    width = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1, "pred": 1}[dtype]
+    t = f"{dtype}[{','.join(map(str, dims))}]{{{','.join('0' * 0)}}}"
+    want = width * int(np.prod(dims)) if dims else width
+    assert shape_bytes(t) == want
+
+
+@given(st.integers(1, 6), st.integers(0, 30))
+def test_rmsnorm_scale_invariant_direction(d, seed):
+    from repro.models.transformer import rmsnorm
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, d)) + 0.1, jnp.float32)
+    w = jnp.ones((d,))
+    y1 = rmsnorm(x, w, 1e-6)
+    y2 = rmsnorm(3.0 * x, w, 1e-6)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3,
+                               atol=1e-4)

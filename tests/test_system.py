@@ -1,0 +1,73 @@
+"""End-to-end system behaviour: the paper's full serving scenario in miniature
+(build -> churn via MN-RU -> dualSearch stays accurate) plus the training
+driver round trip through checkpoint/restore."""
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (HNSWParams, DualIndexManager, batch_knn, build,
+                        count_unreachable)
+from repro.data import brute_force_knn, clustered_vectors
+
+
+def test_streaming_update_scenario():
+    """Mini version of the paper's Random scenario with live recall checks."""
+    rng = np.random.default_rng(0)
+    n, d = 500, 16
+    X = clustered_vectors(n, d, seed=0)
+    params = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                        ef_search=48)
+    index = build(params, jnp.asarray(X))
+    mgr = DualIndexManager(params, index, tau=100, backup_capacity=64)
+
+    live = {i: X[i] for i in range(n)}
+    next_label = n
+    Q = clustered_vectors(40, d, seed=1)
+
+    for rnd in range(4):
+        dels = rng.choice(sorted(live), 25, replace=False).astype(np.int32)
+        newX = clustered_vectors(25, d, seed=10 + rnd)
+        news = np.arange(next_label, next_label + 25, dtype=np.int32)
+        next_label += 25
+        mgr.replaced_update_batch(jnp.asarray(dels), jnp.asarray(newX),
+                                  jnp.asarray(news), "mn_ru_gamma")
+        for dl in dels:
+            del live[int(dl)]
+        for lbl, x in zip(news, newX):
+            live[int(lbl)] = x
+
+        labels, dists = mgr.search(jnp.asarray(Q), 10)
+        lab = np.asarray(labels)
+        # returned labels are live
+        for r in range(lab.shape[0]):
+            for l in lab[r]:
+                if l >= 0:
+                    assert int(l) in live
+        # recall vs exact ground truth over the live set
+        keys = np.fromiter(live.keys(), dtype=np.int64)
+        mat = np.stack([live[int(k)] for k in keys])
+        gt = keys[brute_force_knn(mat, Q, 10)]
+        rec = np.mean([len(set(lab[i]) & set(gt[i])) / 10
+                       for i in range(lab.shape[0])])
+        assert rec > 0.85, (rnd, rec)
+
+
+def test_train_driver_resume(tmp_path):
+    """launch.train runs, checkpoints, crashes on injection, resumes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    base = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "stablelm-1.6b", "--steps", "30", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+            "--log-every", "10"]
+    r = subprocess.run(base + ["--fail-at-step", "25"], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode != 0 and "injected failure" in r.stderr
+    r2 = subprocess.run(base + ["--resume"], env=env, capture_output=True,
+                        text=True, timeout=900)
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "resumed from step 20" in r2.stdout

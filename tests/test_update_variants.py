@@ -1,0 +1,86 @@
+"""replaced_update family: all variants, label semantics, reachability."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (VARIANTS, batch_knn, count_unreachable,
+                        delete_and_update_batch, mark_delete_jit, num_deleted,
+                        replaced_update_jit, slot_of_label)
+from repro.data import clustered_vectors
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variant_roundtrip(small_params, small_index, variant):
+    """Delete 10 points, replace with new ones; new findable, old gone."""
+    rng = np.random.default_rng(7)
+    del_labels = jnp.asarray(rng.choice(600, 10, replace=False).astype(np.int32))
+    newX = jnp.asarray(clustered_vectors(10, 16, seed=11))
+    new_labels = jnp.arange(1000, 1010, dtype=jnp.int32)
+
+    idx = delete_and_update_batch(small_params, small_index, del_labels,
+                                  newX, new_labels, variant)
+    assert int(num_deleted(idx)) == 0
+    labels, _, _ = batch_knn(small_params, idx, newX, 5)
+    hits = np.mean([int(new_labels[i]) in np.asarray(labels[i])
+                    for i in range(10)])
+    assert hits >= 0.9, hits
+    # old labels no longer present
+    for dl in np.asarray(del_labels):
+        assert int(slot_of_label(idx, jnp.int32(dl))) == -1
+
+
+def test_mark_delete_excludes_from_results(small_params, small_index,
+                                           small_data):
+    q = jnp.asarray(small_data[5])
+    labels0, _, _ = batch_knn(small_params, small_index, q[None], 1)
+    assert int(labels0[0, 0]) == 5
+    idx = mark_delete_jit(small_index, jnp.int32(5))
+    assert int(num_deleted(idx)) == 1
+    labels1, _, _ = batch_knn(small_params, idx, q[None], 1)
+    assert int(labels1[0, 0]) != 5
+
+
+def test_update_without_delete_falls_back_to_insert(small_params):
+    """No deleted point + free capacity -> normal insertion path."""
+    from repro.core import build
+    X = clustered_vectors(64, 8, seed=2)
+    idx = build(small_params, jnp.asarray(X), capacity=80)
+    x_new = jnp.asarray(clustered_vectors(1, 8, seed=3)[0])
+    idx2 = replaced_update_jit(small_params, idx, x_new, jnp.int32(999))
+    assert int(idx2.count) == 65
+    labels, _, _ = batch_knn(small_params, idx2, x_new[None], 1)
+    assert int(labels[0, 0]) == 999
+
+
+def test_level_inheritance(small_params, small_index):
+    """The replacement point keeps the deleted point's level (Algorithm 3)."""
+    lvl_before = np.asarray(small_index.levels).copy()
+    idx = mark_delete_jit(small_index, jnp.int32(17))
+    slot = int(slot_of_label(small_index, jnp.int32(17)))
+    x_new = jnp.asarray(clustered_vectors(1, 16, seed=4)[0])
+    idx = replaced_update_jit(small_params, idx, x_new, jnp.int32(2000))
+    assert int(idx.levels[slot]) == lvl_before[slot]
+    assert int(idx.labels[slot]) == 2000
+
+
+@pytest.mark.parametrize("variant", ["hnsw_ru", "mn_ru_gamma"])
+def test_unreachable_growth_trend(small_params, small_index, variant):
+    """After many churn rounds both variants keep the graph mostly reachable
+    (phenomenon magnitude is benchmarked, not asserted, but sanity-bound it)."""
+    rng = np.random.default_rng(3)
+    idx = small_index
+    label_pool = list(range(600))
+    next_label = 5000
+    for rnd in range(5):
+        dels = rng.choice(label_pool, 20, replace=False)
+        label_pool = [l for l in label_pool if l not in set(dels.tolist())]
+        news = list(range(next_label, next_label + 20))
+        label_pool += news
+        next_label += 20
+        idx = delete_and_update_batch(
+            small_params, idx, jnp.asarray(dels, jnp.int32),
+            jnp.asarray(clustered_vectors(20, 16, seed=100 + rnd)),
+            jnp.asarray(news, jnp.int32), variant)
+    u_ind, u_bfs = count_unreachable(idx)
+    assert int(u_ind) <= 30
+    assert int(u_bfs) <= 60
