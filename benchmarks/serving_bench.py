@@ -1,0 +1,159 @@
+"""Serving-engine benchmark: sustained QPS + update lag under mixed load.
+
+A new scenario axis the fig-reproduction benchmarks don't cover: the engine
+serves micro-batched queries while a delete+replace stream drains through
+the fused op-tape, at update:query ratios 1:10 / 1:1 / 10:1. Reports
+sustained QPS, update ops/s, update lag after one maintenance cycle, p99
+batch latency, and recall@10 under churn vs the sequential
+``delete_and_update_batch`` baseline path.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (HNSWParams, batch_knn, build, delete_and_update_batch)
+from repro.data import brute_force_knn, clustered_vectors
+from repro.serving import ServingEngine
+
+from common import SCALE, save_result
+
+RATIOS = {"1:10": (1, 10), "1:1": (1, 1), "10:1": (10, 1)}
+EVENTS_PER_ROUND = 88          # split between updates and queries per ratio
+K = 10
+
+
+def op_stream(n, dim, rounds, updates_per_round, seed=0):
+    """Deterministic per-round (del_labels, newX, new_labels) stream."""
+    rng = np.random.default_rng(seed)
+    live = set(range(n))
+    next_label = n
+    out = []
+    for rnd in range(rounds):
+        dels = rng.choice(sorted(live), size=updates_per_round,
+                          replace=False).astype(np.int32)
+        newX = clustered_vectors(updates_per_round, dim, seed=500 + rnd)
+        news = np.arange(next_label, next_label + updates_per_round,
+                         dtype=np.int32)
+        next_label += updates_per_round
+        live -= set(int(d) for d in dels)
+        live |= set(int(l) for l in news)
+        out.append((dels, newX, news))
+    return out
+
+
+def live_ground_truth(X0, stream, upto_round, Q, k):
+    """Brute-force top-k over the live set after ``upto_round`` rounds."""
+    live = {i: X0[i] for i in range(X0.shape[0])}
+    for dels, newX, news in stream[:upto_round]:
+        for d in dels:
+            del live[int(d)]
+        for x, l in zip(newX, news):
+            live[int(l)] = x
+    labels = np.fromiter(live.keys(), dtype=np.int64)
+    rows = np.stack([live[int(l)] for l in labels])
+    return labels[brute_force_knn(rows, Q, k)]
+
+
+def recall(lab, gt, k):
+    return float(np.mean([len(set(lab[i]) & set(gt[i])) / k
+                          for i in range(lab.shape[0])]))
+
+
+def run_engine(params, index, X0, stream, Q, warmup_rounds=1):
+    """Drive the engine over the op stream; returns measured stats."""
+    engine = ServingEngine(params, index, k=K, max_batch=32,
+                           max_ops_per_drain=128)
+    served = 0
+    lags = []
+    t_measured = 0.0
+    for rnd, (dels, newX, news) in enumerate(stream):
+        for d in dels:
+            engine.delete(int(d))
+        for x, l in zip(newX, news):
+            engine.update(x, int(l))
+        tickets = [engine.search(q) for q in Q]
+        t0 = time.perf_counter()
+        engine.pump()
+        lags.append(engine.update_backlog)
+        while engine.update_backlog:
+            engine.pump()
+        dt = time.perf_counter() - t0
+        if rnd >= warmup_rounds:           # exclude compile-dominated rounds
+            t_measured += dt
+            served += len(tickets)
+    # final-epoch queries for recall under churn
+    tickets = [engine.search(q) for q in Q]
+    engine.pump()
+    lab = np.stack([t.result()[0] for t in tickets])
+    m = engine.metrics
+    drain_s = m.histogram("drain_latency_ms").sum / 1e3
+    return {
+        "sustained_qps": served / t_measured if t_measured else float("nan"),
+        "update_ops_s": m.counter("updates_applied").value / max(drain_s,
+                                                                 1e-9),
+        "mean_lag_after_cycle": float(np.mean(lags)),
+        "p99_batch_ms": m.histogram("batch_latency_ms").percentile(99),
+        "labels": lab,
+    }
+
+
+def run_baseline(params, index, stream, Q):
+    """Sequential delete_and_update_batch + batch_knn (the pre-engine path)."""
+    for dels, newX, news in stream:
+        index = delete_and_update_batch(params, index, jnp.asarray(dels),
+                                        jnp.asarray(newX.astype(np.float32)),
+                                        jnp.asarray(news))
+    labels, _, _ = batch_knn(params, index, jnp.asarray(Q), K)
+    return np.asarray(labels)
+
+
+def main():
+    n = int(1500 * SCALE)
+    dim = 64
+    rounds = 4
+    params = HNSWParams(M=8, M0=16, num_layers=4, ef_construction=64,
+                        ef_search=64)
+    X0 = clustered_vectors(n, dim, seed=0)
+    Q = clustered_vectors(64, dim, seed=1)
+    print(f"building index over {n} x {dim} ...", flush=True)
+    index = build(params, jnp.asarray(X0))
+    index.vectors.block_until_ready()
+
+    results = {}
+    print(f"{'ratio':>6} {'upd/rnd':>8} {'q/rnd':>6} {'qps':>10} "
+          f"{'lag':>6} {'p99 ms':>8} {'recall':>8} {'baseline':>9}")
+    for ridx, (name, (u_w, q_w)) in enumerate(RATIOS.items()):
+        unit = EVENTS_PER_ROUND / (u_w + q_w)
+        upd = max(int(unit * u_w), 1)
+        nq = max(int(unit * q_w), 1)
+        # fixed per-ratio seed (NOT hash(): PYTHONHASHSEED would make the
+        # stream differ between runs and the saved results non-comparable)
+        stream = op_stream(n, dim, rounds, upd, seed=ridx)
+        Qr = Q[:nq]
+        stats = run_engine(params, index, X0, stream, Qr)
+        gt = live_ground_truth(X0, stream, rounds, Qr, K)
+        rec_engine = recall(stats.pop("labels"), gt, K)
+        rec_base = recall(run_baseline(params, index, stream, Qr), gt, K)
+        results[name] = {**stats, "updates_per_round": upd,
+                         "queries_per_round": nq,
+                         "recall_engine": rec_engine,
+                         "recall_baseline": rec_base}
+        print(f"{name:>6} {upd:>8} {nq:>6} {stats['sustained_qps']:>10.1f} "
+              f"{stats['mean_lag_after_cycle']:>6.1f} "
+              f"{stats['p99_batch_ms']:>8.1f} {rec_engine:>8.4f} "
+              f"{rec_base:>9.4f}")
+        assert rec_engine >= rec_base - 1e-6, \
+            f"{name}: engine recall {rec_engine} < baseline {rec_base}"
+
+    save_result("serving_bench", {"n": n, "dim": dim, "rounds": rounds,
+                                  "k": K, "ratios": results})
+    print("saved -> experiments/results/serving_bench.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,9 @@
 from .index import HNSWIndex, HNSWParams, empty_index, sample_level
 from .hnsw import build, insert, insert_jit
 from .search import batch_knn, greedy_layer, knn_search, search_layer
-from .update import (VARIANTS, delete_and_update_batch, first_deleted_slot,
+from .update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE, VARIANTS,
+                     apply_update_batch, apply_update_batch_jit,
+                     delete_and_update_batch, first_deleted_slot,
                      first_free_slot, mark_delete, mark_delete_jit,
                      num_deleted, replaced_update, replaced_update_jit,
                      slot_of_label)
@@ -15,6 +17,8 @@ __all__ = [
     "HNSWIndex", "HNSWParams", "empty_index", "sample_level",
     "build", "insert", "insert_jit",
     "batch_knn", "greedy_layer", "knn_search", "search_layer",
+    "OP_DELETE", "OP_INSERT", "OP_NOP", "OP_REPLACE",
+    "apply_update_batch", "apply_update_batch_jit",
     "VARIANTS", "delete_and_update_batch", "first_deleted_slot",
     "first_free_slot", "mark_delete", "mark_delete_jit", "num_deleted",
     "replaced_update", "replaced_update_jit", "slot_of_label",

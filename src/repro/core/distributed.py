@@ -21,21 +21,27 @@ from jax.experimental.shard_map import shard_map
 
 from .common import INF, INVALID
 from .index import HNSWIndex, HNSWParams, empty_index
-from .hnsw import build
+from .hnsw import build, insert
 from .search import knn_search
-from .update import mark_delete, replaced_update
+from .update import first_free_slot, mark_delete, replaced_update
 
 
 def build_sharded(params: HNSWParams, vectors, labels=None, *, nshards: int,
-                  seed: int = 0):
+                  seed: int = 0, capacity: int | None = None):
     """Build ``nshards`` sub-indexes (host-side), stacked on a leading axis.
 
     Labels are assigned round-robin (label % nshards == shard) so update
-    routing is a pure function of the label.
+    routing is a pure function of the label. ``capacity`` is the PER-SHARD
+    slot count (default: exactly full); oversize it to leave free slots for
+    fresh inserts.
     """
     n, d = vectors.shape
     labels = jnp.arange(n, dtype=jnp.int32) if labels is None else labels
     per = -(-n // nshards)
+    cap = capacity if capacity is not None else per
+    if cap < per:
+        raise ValueError(f"per-shard capacity {cap} < {per} needed for "
+                         f"{n} vectors on {nshards} shards")
     stacked = []
     for s in range(nshards):
         sel = jnp.nonzero(labels % nshards == s, size=per, fill_value=-1)[0]
@@ -44,7 +50,7 @@ def build_sharded(params: HNSWParams, vectors, labels=None, *, nshards: int,
         l = jnp.where(ok, labels[jnp.clip(sel, 0)], INVALID)
         # build over the valid prefix (round-robin => prefix-dense)
         count = int(ok.sum())
-        idx = build(params, v[:count], l[:count], seed=seed + s, capacity=per)
+        idx = build(params, v[:count], l[:count], seed=seed + s, capacity=cap)
         stacked.append(idx)
     return jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
 
@@ -92,22 +98,39 @@ def sharded_batch_knn(params: HNSWParams, stacked: HNSWIndex, Q: jax.Array,
 def sharded_update(params: HNSWParams, stacked: HNSWIndex,
                    del_label: jax.Array, x: jax.Array, new_label: jax.Array,
                    mesh: Mesh, axis: str = "data",
-                   variant: str = "mn_ru_gamma"):
-    """Route one delete+replace to the owning shard; others no-op (SPMD)."""
+                   variant: str = "mn_ru_gamma", fresh_insert: bool = False):
+    """Route one delete+replace to the owning shard; others no-op (SPMD).
+
+    A negative ``del_label`` / ``new_label`` disables that half of the op, so
+    the serving layer can route pure deletes (``new_label=-1``) and pure
+    inserts (``del_label=-1``) through the same compiled program.
+    ``fresh_insert=True`` makes the new-label half a plain insert into the
+    owner's first free slot instead of a replaced_update (never consumes a
+    deleted slot).
+    """
     nshards = mesh.shape[axis]
 
     def local(idx_shard, del_label, x, new_label):
         idx = jax.tree.map(lambda x: x[0], idx_shard)
         sid = jax.lax.axis_index(axis)
-        own_del = (del_label % nshards) == sid
-        own_new = (new_label % nshards) == sid
+        own_del = (del_label >= 0) & ((del_label % nshards) == sid)
+        own_new = (new_label >= 0) & ((new_label % nshards) == sid)
 
         idx = jax.lax.cond(own_del, lambda i: mark_delete(i, del_label),
                            lambda i: i, idx)
-        idx = jax.lax.cond(own_new,
-                           lambda i: replaced_update(params, i, x, new_label,
-                                                     variant),
-                           lambda i: i, idx)
+
+        if fresh_insert:
+            def do_new(i):
+                pid = first_free_slot(i)
+                return jax.lax.cond(
+                    pid >= 0,
+                    lambda ix: insert(params, ix, x, jnp.clip(pid, 0),
+                                      new_label),
+                    lambda ix: ix, i)
+        else:
+            def do_new(i):
+                return replaced_update(params, i, x, new_label, variant)
+        idx = jax.lax.cond(own_new, do_new, lambda i: i, idx)
         return jax.tree.map(lambda a: a[None], idx)
 
     specs = jax.tree.map(lambda _: P(axis), stacked)

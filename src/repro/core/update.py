@@ -268,6 +268,74 @@ def replaced_update_jit(params: HNSWParams, index: HNSWIndex, x: jax.Array,
     return replaced_update(params, index, x, label, variant)
 
 
+# ---------------------------------------------------------------------------
+# fused mixed-op tape (serving write path)
+# ---------------------------------------------------------------------------
+
+OP_NOP = 0      # padding — leaves the index untouched
+OP_DELETE = 1   # mark_delete(label)
+OP_REPLACE = 2  # replaced_update(x, label) — reuses a deleted slot, else fresh
+OP_INSERT = 3   # fresh insert of (x, label) into the first free slot
+
+OP_NAMES = {OP_NOP: "nop", OP_DELETE: "delete", OP_REPLACE: "replace",
+            OP_INSERT: "insert"}
+
+
+def apply_update_batch(params: HNSWParams, index: HNSWIndex, ops: jax.Array,
+                       labels: jax.Array, X: jax.Array,
+                       variant: str = "mn_ru_gamma") -> HNSWIndex:
+    """Apply a padded tape of mixed {delete, replace, insert} ops in order.
+
+    ``ops[T]`` holds OP_* codes, ``labels[T]`` the per-op label, ``X[T, d]``
+    the per-op vector (ignored for delete/nop). One ``lax.scan`` over the
+    tape means an arbitrary mixed batch compiles ONCE per tape length — the
+    serving layer buckets tape lengths (powers of two) to bound
+    recompilation. Semantically identical to issuing the ops one at a time:
+
+      OP_DELETE  == mark_delete
+      OP_REPLACE == replaced_update (same deleted-slot reuse + fresh
+                    fallback)
+      OP_INSERT  == insert into the first free slot (no-op when full)
+      OP_NOP     == padding
+    """
+    if variant not in _VARIANT_CFG:
+        raise ValueError(f"unknown variant {variant!r}; options: {VARIANTS}")
+    ops = jnp.asarray(ops, jnp.int32)
+    labels = jnp.asarray(labels, jnp.int32)
+
+    def body(ix, tape):
+        op, lbl, x = tape
+
+        def nop(ix):
+            return ix
+
+        def dele(ix):
+            return mark_delete(ix, lbl)
+
+        def repl(ix):
+            return replaced_update(params, ix, x, lbl, variant)
+
+        def ins(ix):
+            pid = first_free_slot(ix)
+
+            def do(ix):
+                return insert(params, ix, x, jnp.clip(pid, 0), lbl)
+            return jax.lax.cond(pid >= 0, do, lambda ix: ix, ix)
+
+        return jax.lax.switch(jnp.clip(op, 0, 3), (nop, dele, repl, ins),
+                              ix), ()
+
+    index, _ = jax.lax.scan(body, index, (ops, labels, X))
+    return index
+
+
+@partial(jax.jit, static_argnames=("params", "variant"))
+def apply_update_batch_jit(params: HNSWParams, index: HNSWIndex,
+                           ops: jax.Array, labels: jax.Array, X: jax.Array,
+                           variant: str = "mn_ru_gamma") -> HNSWIndex:
+    return apply_update_batch(params, index, ops, labels, X, variant)
+
+
 @partial(jax.jit, static_argnames=("params", "variant"))
 def delete_and_update_batch(params: HNSWParams, index: HNSWIndex,
                             del_labels: jax.Array, new_X: jax.Array,

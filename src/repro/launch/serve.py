@@ -1,10 +1,12 @@
-"""ANN serving driver: the paper's system end-to-end.
+"""ANN serving driver: the paper's system end-to-end, on ``repro.serving``.
 
-Builds an MN-RU HNSW index over a synthetic corpus, then serves BATCHED
-queries while a stream of real-time updates (markDelete + replaced_update)
-mutates the index — exactly the paper's workload. Reports QPS, update ops/s,
-recall@k vs exact brute force, and unreachable-point counts; optionally
-maintains the backup index (dualSearch).
+Builds an MN-RU HNSW index over a synthetic corpus, then drives a
+:class:`~repro.serving.ServingEngine`: single queries coalesce in the
+micro-batcher, a stream of delete/replace ops drains through the fused
+op-tape, tau-triggered backup rebuilds keep unreachable points servable
+(dualSearch), and every query batch runs against a stable epoch snapshot.
+Reports QPS, update ops/s, update lag, recall@k vs exact brute force, and
+unreachable counts per epoch; ``--metrics-json`` dumps the registry.
 
   PYTHONPATH=src python -m repro.launch.serve --n 5000 --dim 64 \
       --variant mn_ru_gamma --rounds 10 --updates-per-round 100
@@ -17,9 +19,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (HNSWParams, DualIndexManager, batch_knn, build,
-                        count_unreachable)
+from repro.core import HNSWParams, VARIANTS, build
 from repro.data import brute_force_knn, clustered_vectors
+from repro.serving import ServingEngine
 
 
 def main():
@@ -30,11 +32,16 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--M", type=int, default=8)
-    ap.add_argument("--variant", default="mn_ru_gamma")
+    ap.add_argument("--variant", default="mn_ru_gamma", choices=VARIANTS)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--updates-per-round", type=int, default=100)
-    ap.add_argument("--backup", action="store_true")
+    ap.add_argument("--backup", action="store_true",
+                    help="enable tau-triggered backup index + dualSearch")
     ap.add_argument("--tau", type=int, default=400)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-ops-per-drain", type=int, default=128)
+    ap.add_argument("--metrics-json", default="",
+                    help="path to dump the metrics registry as JSON")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -49,15 +56,19 @@ def main():
     index.vectors.block_until_ready()
     print(f"  built in {time.time() - t0:.1f}s")
 
-    mgr = DualIndexManager(params, index, tau=args.tau,
-                           backup_capacity=max(args.n // 8, 64))
+    engine = ServingEngine(
+        params, index, k=args.k, variant=args.variant,
+        max_batch=args.max_batch, max_ops_per_drain=args.max_ops_per_drain,
+        tau=args.tau if args.backup else 0,
+        backup_capacity=max(args.n // 8, 64) if args.backup else 0,
+        track_unreachable=True)
 
     next_label = args.n
     live = dict(enumerate(range(args.n)))  # label -> row id in X_all
     X_all = [X]
 
     for rnd in range(args.rounds):
-        # --- update stream -------------------------------------------------
+        # --- update stream: enqueue deletes + replacements ------------------
         del_labels = rng.choice(sorted(live), size=args.updates_per_round,
                                 replace=False).astype(np.int32)
         newX = clustered_vectors(args.updates_per_round, args.dim,
@@ -66,11 +77,23 @@ def main():
                                next_label + args.updates_per_round,
                                dtype=np.int32)
         next_label += args.updates_per_round
+        for dl in del_labels:
+            engine.delete(int(dl))
+        for x, nl in zip(newX, new_labels):
+            engine.update(x, int(nl))
+
+        # --- queries coalesce in the micro-batcher --------------------------
+        tickets = [engine.search(q) for q in Q]
+        pre_live = dict(live)              # live set at the snapshot epoch
+
+        # --- one maintenance cycle: serve, drain, rebuild, publish ----------
         t0 = time.time()
-        mgr.replaced_update_batch(jnp.asarray(del_labels), jnp.asarray(newX),
-                                  jnp.asarray(new_labels), args.variant)
-        mgr.index.vectors.block_until_ready()
-        upd_dt = time.time() - t0
+        engine.pump()                      # queries see the PRE-round epoch
+        lag = engine.update_backlog        # ops still queued after one cycle
+        while engine.update_backlog:       # drain the round's ops fully
+            engine.pump()
+        dt = time.time() - t0
+
         for dl in del_labels:
             del live[int(dl)]
         base = sum(x.shape[0] for x in X_all)
@@ -78,31 +101,43 @@ def main():
             live[int(nl)] = base + i
         X_all.append(newX)
 
-        # --- batched queries ----------------------------------------------
-        t0 = time.time()
-        if args.backup:
-            labels, dists = mgr.search(jnp.asarray(Q), args.k)
-        else:
-            labels, _, dists = batch_knn(params, mgr.index, jnp.asarray(Q),
-                                         args.k)
-        labels.block_until_ready()
-        q_dt = time.time() - t0
-
-        # --- recall vs exact over the LIVE set ------------------------------
+        # --- recall vs exact over the snapshot-epoch live set ---------------
+        lab_np = np.stack([t.result()[0] for t in tickets])
         Xcat = np.concatenate(X_all)
-        live_labels = np.fromiter(live.keys(), dtype=np.int64)
-        live_rows = Xcat[[live[int(l)] for l in live_labels]]
-        gt_idx = brute_force_knn(live_rows, Q, args.k)
-        gt_labels = live_labels[gt_idx]
-        lab_np = np.asarray(labels)
-        recall = np.mean([len(set(lab_np[i]) & set(gt_labels[i])) / args.k
-                          for i in range(args.queries)])
-        u_ind, u_bfs = count_unreachable(mgr.index)
-        print(f"round {rnd:3d}: updates {args.updates_per_round / upd_dt:8.1f} ops/s"
-              f" | queries {args.queries / q_dt:8.1f} qps"
+        pre_labels = np.fromiter(pre_live.keys(), dtype=np.int64)
+        pre_rows = Xcat[[pre_live[int(l)] for l in pre_labels]]
+        gt = pre_labels[brute_force_knn(pre_rows, Q, args.k)]
+        recall = np.mean([len(set(lab_np[i]) & set(gt[i])) / args.k
+                          for i in range(len(Q))])
+        u = engine.metrics
+        q_lat = u.histogram("batch_latency_ms").summary()
+        print(f"round {rnd:3d}: epoch {engine.epoch}"
+              f" | cycle {dt * 1e3:7.1f} ms"
+              f" | qps {len(Q) / max(dt, 1e-9):8.1f}"
+              f" | lag {lag}"
               f" | recall@{args.k} {recall:.4f}"
-              f" | unreachable indeg={int(u_ind)} bfs={int(u_bfs)}",
+              f" | batch p99 {q_lat['p99']:.1f} ms"
+              f" | unreachable indeg="
+              f"{int(u.gauge('unreachable_indegree'))}"
+              f" bfs={int(u.gauge('unreachable_bfs'))}",
               flush=True)
+
+    # --- final recall against the fully-churned live set --------------------
+    tickets = [engine.search(q) for q in Q]
+    engine.pump()
+    lab_np = np.stack([t.result()[0] for t in tickets])
+    Xcat = np.concatenate(X_all)
+    live_labels = np.fromiter(live.keys(), dtype=np.int64)
+    live_rows = Xcat[[live[int(l)] for l in live_labels]]
+    gt = live_labels[brute_force_knn(live_rows, Q, args.k)]
+    recall = np.mean([len(set(lab_np[i]) & set(gt[i])) / args.k
+                      for i in range(len(Q))])
+    print(f"final recall@{args.k} over live set: {recall:.4f}")
+    print(engine.metrics.report())
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            f.write(engine.metrics.dumps())
+        print(f"metrics -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

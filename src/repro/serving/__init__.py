@@ -1,0 +1,19 @@
+"""Real-time serving engine over the MN-RU HNSW core.
+
+Micro-batched queries against immutable epoch snapshots, while a scheduler
+streams mixed delete/replace/insert batches through one fused op-tape
+program and folds tau-triggered backup rebuilds into the maintenance cycle.
+"""
+from .batcher import MicroBatcher, QueryTicket, bucket_size, pow2_floor
+from .engine import PumpStats, ServingEngine
+from .metrics import Counter, Histogram, MetricsRegistry
+from .snapshot import EpochSnapshot, SnapshotStore
+from .update_queue import UpdateOp, UpdateScheduler
+
+__all__ = [
+    "MicroBatcher", "QueryTicket", "bucket_size", "pow2_floor",
+    "PumpStats", "ServingEngine",
+    "Counter", "Histogram", "MetricsRegistry",
+    "EpochSnapshot", "SnapshotStore",
+    "UpdateOp", "UpdateScheduler",
+]

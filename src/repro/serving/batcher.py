@@ -1,0 +1,169 @@
+"""Dynamic query micro-batcher: coalesce singles into padded jit batches.
+
+Single-query arrivals are queued as :class:`QueryTicket`\\ s; ``flush()``
+packs them into fixed-shape batches and dispatches ONE jitted
+``batch_knn`` / ``batch_dual_search`` call per batch. Batch shapes are
+bucketed to powers of two (capped at ``max_batch``), so the number of
+distinct compiled programs is ``log2(max_batch) + 1`` per (k, ef) — bounded
+recompilation no matter how ragged the arrival pattern is. Padding rows
+duplicate the first real query (never NaNs into the kernel) and their
+results are discarded on scatter-back.
+
+The batcher is snapshot-agnostic: ``flush(snapshot)`` runs every ticket in
+the flush against that single :class:`EpochSnapshot`, which is what gives
+the engine its isolation guarantee (tickets record the epoch they were
+served at).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backup import batch_dual_search
+from repro.core.index import HNSWParams
+from repro.core.search import batch_knn
+
+from .metrics import MetricsRegistry
+from .snapshot import EpochSnapshot
+
+
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= n (for pow2-aligning user-supplied caps)."""
+    return 1 << (int(n).bit_length() - 1)
+
+
+def bucket_size(n: int, max_batch: int) -> int:
+    """Smallest power of two >= n, capped at ``max_batch``."""
+    b = 1
+    while b < n and b < max_batch:
+        b <<= 1
+    return min(b, max_batch)
+
+
+class QueryTicket:
+    """Handle for one submitted query; filled in when its batch is served."""
+
+    __slots__ = ("qid", "vector", "labels", "dists", "epoch", "latency_s",
+                 "_submit_t", "_done")
+
+    def __init__(self, qid: int, vector: np.ndarray):
+        self.qid = qid
+        self.vector = vector
+        self.labels: np.ndarray | None = None
+        self.dists: np.ndarray | None = None
+        self.epoch: int | None = None
+        self.latency_s: float | None = None
+        self._submit_t = time.perf_counter()
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> tuple[np.ndarray, np.ndarray]:
+        if not self._done:
+            raise RuntimeError(f"query {self.qid} not served yet — pump the "
+                               "engine (or flush the batcher) first")
+        return self.labels, self.dists
+
+    def _complete(self, labels: np.ndarray, dists: np.ndarray,
+                  epoch: int) -> None:
+        self.labels = labels
+        self.dists = dists
+        self.epoch = epoch
+        self.latency_s = time.perf_counter() - self._submit_t
+        self._done = True
+
+
+class MicroBatcher:
+    """Coalesces pending queries and serves them against one snapshot.
+
+    ``search_fn(snapshot, Q) -> (labels[b, k], dists[b, k])`` can be
+    injected to reroute dispatch (the engine uses this for the sharded
+    path); by default it picks ``batch_dual_search`` when the snapshot
+    carries a backup index and plain ``batch_knn`` otherwise.
+    """
+
+    def __init__(self, params: HNSWParams, k: int, ef: int | None = None,
+                 max_batch: int = 64, metrics: MetricsRegistry | None = None,
+                 search_fn: Callable | None = None,
+                 backup_params: HNSWParams | None = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.params = params
+        self.k = k
+        self.ef = ef
+        # round the cap DOWN to a power of two so every dispatch shape is a
+        # pow2 and the compiled-program count stays log2(max_batch)+1
+        self.max_batch = pow2_floor(max_batch)
+        self.metrics = metrics or MetricsRegistry()
+        self.backup_params = backup_params or params
+        self._search_fn = search_fn or self._default_search
+        self._pending: list[QueryTicket] = []
+        self._next_qid = 0
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, q) -> QueryTicket:
+        q = np.asarray(q, np.float32)
+        if q.ndim != 1:
+            raise ValueError(f"submit() takes one query vector, got {q.shape}")
+        t = QueryTicket(self._next_qid, q)
+        self._next_qid += 1
+        self._pending.append(t)
+        self.metrics.counter("queries_submitted").inc()
+        return t
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- dispatch -----------------------------------------------------------
+    def _default_search(self, snapshot: EpochSnapshot, Q: jnp.ndarray):
+        if snapshot.has_backup:
+            labels, dists = batch_dual_search(self.params, snapshot.index,
+                                              self.backup_params,
+                                              snapshot.backup, Q, self.k,
+                                              self.ef)
+            return labels, dists
+        labels, _, dists = batch_knn(self.params, snapshot.index, Q, self.k,
+                                     self.ef)
+        return labels, dists
+
+    def flush(self, snapshot: EpochSnapshot) -> list[QueryTicket]:
+        """Serve ALL pending queries against ``snapshot``; return the tickets.
+
+        A backlog larger than ``max_batch`` dispatches multiple full batches
+        back to back — every ticket in the flush still sees the same epoch.
+        """
+        completed: list[QueryTicket] = []
+        while self._pending:
+            take = min(len(self._pending), self.max_batch)
+            batch = self._pending[:take]
+            del self._pending[:take]
+
+            b = bucket_size(take, self.max_batch)
+            Q = np.empty((b, batch[0].vector.shape[0]), np.float32)
+            for i, t in enumerate(batch):
+                Q[i] = t.vector
+            Q[take:] = batch[0].vector          # pad rows: discarded below
+
+            t0 = time.perf_counter()
+            labels, dists = self._search_fn(snapshot, jnp.asarray(Q))
+            labels = np.asarray(labels)
+            dists = np.asarray(dists)
+            dt = time.perf_counter() - t0
+
+            for i, t in enumerate(batch):
+                t._complete(labels[i], dists[i], snapshot.epoch)
+                self.metrics.histogram("query_latency_ms").observe(
+                    t.latency_s * 1e3)
+            completed.extend(batch)
+            self.metrics.counter("batches_dispatched").inc()
+            self.metrics.counter("queries_served").inc(take)
+            self.metrics.counter("pad_waste_rows").inc(b - take)
+            self.metrics.histogram("batch_latency_ms").observe(dt * 1e3)
+            self.metrics.histogram("batch_fill").observe(take / b)
+        return completed

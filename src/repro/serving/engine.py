@@ -1,0 +1,207 @@
+"""ServingEngine: micro-batched queries over epoch snapshots + fused writes.
+
+One object ties the serving substrate together:
+
+  * reads  — :class:`MicroBatcher` coalesces single queries and serves them
+             against the published :class:`EpochSnapshot` (dualSearch when a
+             backup index is enabled);
+  * writes — :class:`UpdateScheduler` queues delete/replace/insert ops and
+             drains them through the fused ``apply_update_batch`` op tape
+             into the back buffer;
+  * maintenance — tau-triggered backup rebuilds over unreachable points,
+             folded into the cycle instead of blocking a write call;
+  * publication — ``SnapshotStore.publish()`` swaps the back buffer in,
+             bumping the epoch.
+
+The event loop is ONE deterministic method, :meth:`pump`:
+
+    serve pending queries (old snapshot) -> drain updates -> maybe rebuild
+    backup -> publish new snapshot
+
+so tests and drivers can single-step the engine without threads — queries
+submitted before a pump are guaranteed to be served against the pre-pump
+epoch, never a half-applied write batch.
+
+Sharded mode: pass ``mesh=`` (and a stacked index from
+``core.distributed.build_sharded``) and the engine reroutes queries through
+``sharded_batch_knn`` (one all_gather merge per batch) and updates through
+``sharded_update`` (SPMD-routed per op). Backup/dualSearch is single-host
+only for now.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import HNSWIndex, HNSWParams, empty_index
+from repro.core.reach import count_unreachable
+from repro.core.update import OP_DELETE, OP_INSERT, OP_NOP
+
+from .batcher import MicroBatcher, QueryTicket
+from .metrics import MetricsRegistry
+from .snapshot import EpochSnapshot, SnapshotStore
+from .update_queue import UpdateOp, UpdateScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class PumpStats:
+    """What one deterministic event-loop step did."""
+    epoch: int
+    queries_served: int
+    updates_applied: int
+    backup_rebuilt: bool
+    update_backlog: int
+
+
+class ServingEngine:
+    def __init__(self, params: HNSWParams, index: HNSWIndex, *, k: int = 10,
+                 ef: int | None = None, variant: str = "mn_ru_gamma",
+                 max_batch: int = 64, max_ops_per_drain: int = 128,
+                 tau: int = 0, backup_capacity: int = 0,
+                 backup_params: HNSWParams | None = None,
+                 mesh=None, axis: str = "data",
+                 track_unreachable: bool = False,
+                 metrics: MetricsRegistry | None = None):
+        self.params = params
+        self.k = k
+        self.ef = ef
+        self.variant = variant
+        self.mesh = mesh
+        self.axis = axis
+        self.track_unreachable = track_unreachable
+        self.metrics = metrics or MetricsRegistry()
+        self.dim = int(index.vectors.shape[-1])
+
+        sharded = mesh is not None
+        use_backup = tau > 0 and backup_capacity > 0
+        if sharded and use_backup:
+            raise ValueError("backup/dualSearch is not supported in sharded "
+                             "mode yet — drop tau/backup_capacity")
+        if sharded and track_unreachable:
+            # count_unreachable expects a single [L, N, M0] adjacency, not a
+            # stacked [S, L, N, M0] one
+            raise ValueError("track_unreachable is not supported in sharded "
+                             "mode yet")
+        backup = None
+        if use_backup:
+            backup = empty_index(backup_params or params, backup_capacity,
+                                 self.dim, 1, dtype=index.vectors.dtype)
+
+        self.store = SnapshotStore(index, backup)
+        self.batcher = MicroBatcher(
+            params, k, ef, max_batch, metrics=self.metrics,
+            search_fn=self._sharded_search if sharded else None,
+            backup_params=backup_params)
+        self.scheduler = UpdateScheduler(
+            params, self.dim, variant, max_ops_per_drain, tau=tau,
+            backup_params=backup_params, backup_capacity=backup_capacity,
+            metrics=self.metrics,
+            apply_fn=self._sharded_apply if sharded else None)
+
+    # -- sharded routing ----------------------------------------------------
+    def _sharded_search(self, snapshot: EpochSnapshot, Q):
+        from repro.core.distributed import sharded_batch_knn
+        return sharded_batch_knn(self.params, snapshot.index, Q, self.k,
+                                 self.mesh, self.axis, self.ef)
+
+    def _sharded_apply(self, index, ops, labels, X):
+        """Route each tape op to its owning shard (uniform SPMD no-op
+        elsewhere). One collective program per op — batching collectives is
+        a follow-up; correctness-first."""
+        from repro.core.distributed import sharded_update
+        ops_np = np.asarray(ops)
+        labels_np = np.asarray(labels)
+        for i in range(ops_np.shape[0]):
+            op = int(ops_np[i])
+            if op == OP_NOP:
+                continue
+            if op == OP_DELETE:
+                dl, nl = jnp.int32(labels_np[i]), jnp.int32(-1)
+            else:
+                dl, nl = jnp.int32(-1), jnp.int32(labels_np[i])
+            index = sharded_update(self.params, index, dl, X[i], nl,
+                                   self.mesh, self.axis, self.variant,
+                                   fresh_insert=(op == OP_INSERT))
+        return index
+
+    # -- client API ---------------------------------------------------------
+    def search(self, q) -> QueryTicket:
+        """Enqueue one query; served at the next ``pump()``."""
+        return self.batcher.submit(q)
+
+    def delete(self, label: int) -> None:
+        self.scheduler.delete(label)
+
+    def update(self, vector, label: int) -> None:
+        """replaced_update: new point reuses a deleted slot (paper Alg. 2+3)."""
+        self.scheduler.replace(vector, label)
+
+    def insert(self, vector, label: int) -> None:
+        self.scheduler.insert(vector, label)
+
+    def submit_update(self, op: UpdateOp) -> None:
+        self.scheduler.submit(op)
+
+    @property
+    def epoch(self) -> int:
+        return self.store.epoch
+
+    @property
+    def update_backlog(self) -> int:
+        return self.scheduler.backlog
+
+    @property
+    def query_backlog(self) -> int:
+        return self.batcher.pending
+
+    def snapshot(self) -> EpochSnapshot:
+        return self.store.current()
+
+    # -- the event loop -----------------------------------------------------
+    def pump(self, max_updates: int | None = None) -> PumpStats:
+        """One deterministic serve/maintain/publish step."""
+        t0 = time.perf_counter()
+        snap = self.store.current()
+
+        served = self.batcher.flush(snap)
+
+        new_index, applied = self.scheduler.drain(self.store.working_index(),
+                                                  max_updates)
+        if applied:
+            self.store.stage(index=new_index)
+
+        backup = self.scheduler.maybe_rebuild(self.store.working_index())
+        rebuilt = backup is not None
+        if rebuilt:
+            self.store.stage(backup=backup)
+
+        out = self.store.publish()
+
+        self.metrics.counter("pumps").inc()
+        self.metrics.set_gauge("epoch", out.epoch)
+        self.metrics.set_gauge("update_lag_ops", self.scheduler.backlog)
+        self.metrics.histogram("pump_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        if self.track_unreachable and out.epoch != snap.epoch:
+            u_ind, u_bfs = count_unreachable(out.index)
+            self.metrics.set_gauge("unreachable_indegree", int(u_ind))
+            self.metrics.set_gauge("unreachable_bfs", int(u_bfs))
+            self.metrics.histogram("unreachable_per_epoch").observe(int(u_ind))
+        return PumpStats(epoch=out.epoch, queries_served=len(served),
+                         updates_applied=applied, backup_rebuilt=rebuilt,
+                         update_backlog=self.scheduler.backlog)
+
+    def drain_all(self, max_pumps: int = 1_000) -> list[PumpStats]:
+        """Pump until both queues are empty (or ``max_pumps``)."""
+        stats = []
+        for _ in range(max_pumps):
+            stats.append(self.pump())
+            if self.update_backlog == 0 and self.query_backlog == 0:
+                break
+        return stats
+
+    def stats(self) -> dict:
+        return self.metrics.to_dict()

@@ -5,7 +5,10 @@ Design for 1000+-node posture:
     writer never corrupts the latest checkpoint;
   * keep-k rotation bounds disk;
   * async: the device->host transfer happens synchronously (cheap), the disk
-    write on a daemon thread so the train loop never stalls on IO;
+    write on a NON-daemon thread so the train loop never stalls on IO yet an
+    in-flight write always completes — even when the main thread dies with an
+    exception, interpreter shutdown joins the writer, so the newest
+    checkpoint is never lost to a crash;
   * mesh-agnostic: pytrees are saved as host numpy (npz) keyed by flattened
     tree paths — restore works under ANY device mesh (elastic rescale), the
     caller re-applies NamedShardings via device_put.
@@ -62,8 +65,11 @@ class CheckpointManager:
         meta = {"step": int(step), **(extra or {})}
         if self.async_write:
             self.wait()
+            # non-daemon: a crash between save() and the write finishing must
+            # not kill the writer, or resume would silently fall back to the
+            # previous (stale) checkpoint
             t = threading.Thread(target=self._write, args=(step, host, meta),
-                                 daemon=True)
+                                 daemon=False)
             t.start()
             self._pending = t
         else:
@@ -89,17 +95,33 @@ class CheckpointManager:
             self._pending = None
 
     def _gc(self) -> None:
-        ckpts = sorted(self.all_steps())
-        for s in ckpts[:-self.keep] if self.keep else []:
-            import shutil
-            shutil.rmtree(os.path.join(self.dir, f"ckpt_{s:010d}"),
-                          ignore_errors=True)
+        if not self.keep:
+            return
+        import shutil
+        # keep the newest `keep` COMPLETE checkpoints; everything else under
+        # a ckpt_ name — older completes AND incomplete/corrupt dirs (which
+        # all_steps() hides from resume) — is garbage and must not leak disk
+        keep_names = {f"ckpt_{s:010d}" for s in self.all_steps()[-self.keep:]}
+        for name in os.listdir(self.dir):
+            # any surviving tmp.* is from a dead process (the in-flight
+            # write was already os.replace'd before _gc runs, and save()
+            # serialises writers) — reclaim it along with rotated ckpts
+            stale_tmp = name.startswith("tmp.")
+            if (name.startswith("ckpt_") and name not in keep_names) \
+                    or stale_tmp:
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- read -------------------------------------------------------------
     def all_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("ckpt_"):
+            # only COMPLETE checkpoints count: both payload files must exist
+            # (os.replace makes this the common case; a half-copied dir from
+            # an external sync must not win latest-step selection)
+            if name.startswith("ckpt_") and all(
+                    os.path.exists(os.path.join(self.dir, name, f))
+                    for f in ("state.npz", "meta.json")):
                 out.append(int(name.split("_")[1]))
         return sorted(out)
 

@@ -2,6 +2,11 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the 'test' extra "
+                           "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.common import dedup_ids, pairwise_sqdist, topk_by_distance

@@ -1,0 +1,340 @@
+"""Serving subsystem: snapshot isolation, batcher correctness, op-tape
+equivalence, and engine recall under churn vs the sequential baseline."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HNSWParams, OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
+                        apply_update_batch_jit, batch_knn, build,
+                        delete_and_update_batch, first_free_slot,
+                        mark_delete_jit, replaced_update_jit)
+from repro.core.hnsw import insert_jit
+from repro.data import brute_force_knn, clustered_vectors
+from repro.serving import (MicroBatcher, ServingEngine, SnapshotStore,
+                           bucket_size, pow2_floor)
+
+
+# ---------------------------------------------------------------------------
+# snapshot store
+# ---------------------------------------------------------------------------
+
+def test_snapshot_publish_semantics(small_params, small_index):
+    store = SnapshotStore(small_index)
+    s0 = store.current()
+    assert s0.epoch == 0 and not store.dirty
+
+    # publishing with nothing staged is a no-op (same epoch object)
+    assert store.publish() is s0
+
+    staged = mark_delete_jit(small_index, jnp.int32(3))
+    store.stage(index=staged)
+    assert store.dirty
+    # staged writes invisible to the reader until publish
+    assert store.current() is s0
+    assert not bool(store.current().index.deleted[3])
+    assert bool(store.working_index().deleted[3])
+
+    s1 = store.publish()
+    assert s1.epoch == 1
+    assert bool(s1.index.deleted[3])
+    # the old snapshot a reader grabbed is untouched
+    assert not bool(s0.index.deleted[3])
+
+
+def test_query_before_publish_never_sees_inflight_writes(small_params,
+                                                         small_data,
+                                                         small_index):
+    """A query issued before publish() is served at the pre-write epoch."""
+    engine = ServingEngine(small_params, small_index, k=5, max_batch=8)
+    target = 7
+    q = np.asarray(small_data[target])
+
+    t_before = engine.search(q)
+    engine.delete(target)
+    engine.update(clustered_vectors(1, small_data.shape[1], seed=99)[0],
+                  10_000)
+    stats = engine.pump()          # serves t_before THEN applies the ops
+    assert stats.queries_served == 1 and stats.updates_applied == 2
+
+    labels, _ = t_before.result()
+    assert t_before.epoch == 0
+    assert target in labels.tolist()       # pre-delete snapshot: still there
+
+    t_after = engine.search(q)
+    engine.pump()
+    labels2, _ = t_after.result()
+    assert t_after.epoch == 1
+    assert target not in labels2.tolist()  # post-publish: deleted
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+def test_bucket_size():
+    assert [bucket_size(n, 16) for n in (1, 2, 3, 5, 8, 9, 16, 40)] == \
+        [1, 2, 4, 8, 8, 16, 16, 16]
+    assert [pow2_floor(n) for n in (1, 2, 3, 48, 64, 100)] == \
+        [1, 2, 2, 32, 64, 64]
+    # a non-pow2 cap rounds down so every dispatch shape stays a power of two
+    assert MicroBatcher(HNSWParams(), k=1, max_batch=48).max_batch == 32
+
+
+@pytest.mark.parametrize("n_queries", [1, 3, 8, 13])
+def test_batcher_matches_direct_batch_knn(small_params, small_index,
+                                          n_queries):
+    """Padding/bucketing must not change any individual query's result."""
+    k = 10
+    Q = clustered_vectors(n_queries, small_index.dim, seed=5)
+    batcher = MicroBatcher(small_params, k=k, max_batch=8)
+    store = SnapshotStore(small_index)
+    tickets = [batcher.submit(q) for q in Q]
+    batcher.flush(store.current())
+
+    want_labels, _, want_dists = batch_knn(small_params, small_index,
+                                           jnp.asarray(Q), k)
+    got_labels = np.stack([t.result()[0] for t in tickets])
+    got_dists = np.stack([t.result()[1] for t in tickets])
+    np.testing.assert_array_equal(got_labels, np.asarray(want_labels))
+    np.testing.assert_allclose(got_dists, np.asarray(want_dists), rtol=1e-6)
+
+
+def test_batcher_bucketed_recompilation(small_params, small_index):
+    """Distinct dispatch shapes stay bounded by log2(max_batch)+1 buckets."""
+    batcher = MicroBatcher(small_params, k=5, max_batch=8)
+    store = SnapshotStore(small_index)
+    for n in (1, 2, 3, 5, 6, 7, 8, 11):
+        for q in clustered_vectors(n, small_index.dim, seed=n):
+            batcher.submit(q)
+        batcher.flush(store.current())
+    fills = batcher.metrics.histogram("batch_fill")
+    assert fills.count == 9                # 11 queries split into 8 + 3
+    assert batcher.metrics.counter("queries_served").value == 43
+
+
+# ---------------------------------------------------------------------------
+# fused op tape
+# ---------------------------------------------------------------------------
+
+def _tree_equal(a, b):
+    for la, lb, in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_apply_update_batch_matches_sequential(small_params, small_index):
+    """Mixed op tape == issuing mark_delete / replaced_update / insert 1-by-1
+    in the same order (OP_NOP padding included)."""
+    d = small_index.dim
+    newX = clustered_vectors(4, d, seed=77)
+    ops = [(OP_DELETE, 11, np.zeros(d, np.float32)),
+           (OP_DELETE, 23, np.zeros(d, np.float32)),
+           (OP_REPLACE, 1001, newX[0]),
+           (OP_NOP, -1, np.zeros(d, np.float32)),
+           (OP_REPLACE, 1002, newX[1]),
+           (OP_DELETE, 42, np.zeros(d, np.float32)),
+           (OP_REPLACE, 1003, newX[2]),
+           (OP_NOP, -1, np.zeros(d, np.float32))]
+
+    tape = apply_update_batch_jit(
+        small_params, small_index,
+        jnp.asarray([o[0] for o in ops], jnp.int32),
+        jnp.asarray([o[1] for o in ops], jnp.int32),
+        jnp.asarray(np.stack([o[2] for o in ops])))
+
+    seq = small_index
+    for op, lbl, x in ops:
+        if op == OP_DELETE:
+            seq = mark_delete_jit(seq, jnp.int32(lbl))
+        elif op == OP_REPLACE:
+            seq = replaced_update_jit(small_params, seq, jnp.asarray(x),
+                                      jnp.int32(lbl))
+    _tree_equal(tape, seq)
+
+
+def test_apply_update_batch_insert_op(small_params, small_data):
+    """OP_INSERT fills free slots; a full index makes it a no-op."""
+    n, d = 64, small_data.shape[1]
+    index = build(small_params, jnp.asarray(small_data[:n]), capacity=n + 2)
+    newX = clustered_vectors(3, d, seed=88)
+    tape = apply_update_batch_jit(
+        small_params, index,
+        jnp.asarray([OP_INSERT, OP_INSERT, OP_INSERT], jnp.int32),
+        jnp.asarray([500, 501, 502], jnp.int32), jnp.asarray(newX))
+
+    seq = index
+    for i, lbl in enumerate((500, 501)):
+        pid = first_free_slot(seq)
+        seq = insert_jit(small_params, seq, jnp.asarray(newX[i]), pid,
+                         jnp.int32(lbl))
+    # third insert: no free slot left -> must be a no-op on the tape side too
+    _tree_equal(tape, seq)
+    assert int(tape.count) == n + 2
+    labels, _, _ = batch_knn(small_params, tape, jnp.asarray(newX[:2]), 1)
+    assert np.asarray(labels)[:, 0].tolist() == [500, 501]
+
+
+# ---------------------------------------------------------------------------
+# engine under churn
+# ---------------------------------------------------------------------------
+
+def _op_stream(n, d, rounds, per_round, seed=0):
+    rng = np.random.default_rng(seed)
+    live = set(range(n))
+    nxt = n
+    for rnd in range(rounds):
+        dels = rng.choice(sorted(live), per_round, replace=False).astype(
+            np.int32)
+        newX = clustered_vectors(per_round, d, seed=300 + rnd)
+        news = np.arange(nxt, nxt + per_round, dtype=np.int32)
+        nxt += per_round
+        live -= set(int(x) for x in dels)
+        live |= set(int(x) for x in news)
+        yield dels, newX, news
+
+
+def test_engine_recall_under_churn_matches_baseline(small_params, small_data,
+                                                    small_index):
+    """≥500 mixed ops stream through apply_update_batch while queries are
+    served; final recall@10 >= the sequential delete_and_update_batch path
+    (identical op order => identical index => identical recall)."""
+    n, d = small_data.shape
+    rounds, per_round = 5, 51          # 5 * 51 * 2 = 510 mixed ops
+    Q = clustered_vectors(24, d, seed=1)
+    stream = list(_op_stream(n, d, rounds, per_round, seed=3))
+
+    engine = ServingEngine(small_params, small_index, k=10, max_batch=32,
+                           max_ops_per_drain=128)
+    baseline = small_index
+    total_ops = 0
+    for dels, newX, news in stream:
+        for dl in dels:
+            engine.delete(int(dl))
+        for x, nl in zip(newX, news):
+            engine.update(x, int(nl))
+        tickets = [engine.search(q) for q in Q]
+        engine.pump()
+        while engine.update_backlog:
+            engine.pump()
+        assert all(t.done for t in tickets)
+        total_ops += 2 * len(dels)
+        baseline = delete_and_update_batch(
+            small_params, baseline, jnp.asarray(dels),
+            jnp.asarray(newX.astype(np.float32)), jnp.asarray(news))
+    assert engine.metrics.counter("updates_applied").value == total_ops >= 500
+
+    # final live ground truth
+    live = {i: small_data[i] for i in range(n)}
+    for dels, newX, news in stream:
+        for dl in dels:
+            del live[int(dl)]
+        for x, nl in zip(newX, news):
+            live[int(nl)] = x
+    keys = np.fromiter(live.keys(), dtype=np.int64)
+    gt = keys[brute_force_knn(np.stack([live[int(k)] for k in keys]), Q, 10)]
+
+    tickets = [engine.search(q) for q in Q]
+    engine.pump()
+    lab_e = np.stack([t.result()[0] for t in tickets])
+    lab_b = np.asarray(batch_knn(small_params, baseline, jnp.asarray(Q),
+                                 10)[0])
+    rec_e = np.mean([len(set(lab_e[i]) & set(gt[i])) / 10
+                     for i in range(len(Q))])
+    rec_b = np.mean([len(set(lab_b[i]) & set(gt[i])) / 10
+                     for i in range(len(Q))])
+    assert rec_e >= rec_b - 1e-9, (rec_e, rec_b)
+    assert rec_e > 0.8, rec_e
+
+
+def test_engine_tau_backup_rebuild_in_maintenance_cycle(small_params,
+                                                        small_data,
+                                                        small_index):
+    """Backup rebuilds fire from pump() after tau replace ops, off the
+    write-submission path, and publish as part of the same epoch swap."""
+    n, d = small_data.shape
+    engine = ServingEngine(small_params, small_index, k=10, tau=5,
+                           backup_capacity=32, max_ops_per_drain=64)
+    assert engine.snapshot().has_backup
+    for dels, newX, news in _op_stream(n, d, 1, 25, seed=9):
+        for dl in dels:
+            engine.delete(int(dl))
+        for x, nl in zip(newX, news):
+            engine.update(x, int(nl))
+    stats = engine.pump()
+    while engine.update_backlog:
+        stats = engine.pump()
+    # one drain crossed 5 tau thresholds -> exactly ONE rebuild (counter
+    # catches up), and an idle pump must not rebuild the identical index
+    assert engine.metrics.counter("backup_rebuilds").value == 1
+    assert engine.scheduler.applied_ru_ops == 25
+    epoch = engine.epoch
+    engine.pump()
+    assert engine.metrics.counter("backup_rebuilds").value == 1
+    assert engine.epoch == epoch
+    # dualSearch path serves against the rebuilt backup snapshot
+    t = engine.search(small_data[0])
+    engine.pump()
+    assert t.done and t.epoch == stats.epoch
+
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.core import HNSWParams
+from repro.core.distributed import build_sharded, shard_index
+from repro.data import clustered_vectors
+from repro.serving import ServingEngine
+
+mesh = jax.make_mesh((4,), ("data",))
+params = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                    ef_search=48)
+X = clustered_vectors(400, 16, seed=0)
+stacked = shard_index(build_sharded(params, jnp.asarray(X), nshards=4,
+                                    capacity=104),
+                      mesh, "data")
+engine = ServingEngine(params, stacked, k=10, mesh=mesh, max_batch=8,
+                       max_ops_per_drain=8)
+
+t0 = engine.search(X[3])
+engine.delete(3)
+xnew = clustered_vectors(1, 16, seed=2)[0]
+engine.update(xnew, 403)          # owner shard = 403 % 4 = 3
+engine.pump()
+assert 3 in np.asarray(t0.result()[0]).tolist()   # pre-delete epoch
+t1 = engine.search(xnew)
+t2 = engine.search(X[3])
+engine.pump()
+assert int(t1.result()[0][0]) == 403, t1.result()
+assert 3 not in np.asarray(t2.result()[0]).tolist()
+
+# fresh insert must take a FREE slot on the owner shard, not a deleted one
+engine.delete(7)                  # leaves a tombstone on shard 3
+xins = clustered_vectors(1, 16, seed=4)[0]
+engine.insert(xins, 407)          # owner shard = 3, same as the tombstone
+engine.pump()
+t3 = engine.search(xins)
+engine.pump()
+assert int(t3.result()[0][0]) == 407, t3.result()
+shard3 = jax.tree.map(lambda a: a[3], engine.snapshot().index)
+slot7 = int(jnp.argmax(shard3.labels == 7))
+assert bool(shard3.deleted[slot7])          # tombstone NOT consumed
+assert int(shard3.count) == 101             # grew into a free slot
+print("sharded engine OK epoch", engine.epoch)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_engine_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "sharded engine OK" in r.stdout
