@@ -15,7 +15,8 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (HNSWParams, batch_knn, build, count_unreachable,
+from repro import api
+from repro.core import (HNSWParams, batch_knn, count_unreachable,
                         delete_and_update_batch)
 from repro.data import brute_force_knn, clustered_vectors
 
@@ -51,15 +52,25 @@ _INDEX_CACHE = {}
 
 
 def dataset_and_index(ds: str):
-    """(X, params, freshly built index) with in-process caching of the build."""
+    """(X, params, freshly built index) with in-process caching of the build.
+
+    Construction goes through the ``repro.api`` facade, so capacities are
+    pow2-rounded like any production index (churn slot-reuse is unaffected:
+    deletes always precede replaces in the drivers).
+    """
     if ds not in _INDEX_CACHE:
         spec = DATASETS[ds]
         X = clustered_vectors(spec["n"], spec["dim"], seed=hash(ds) % 1000)
-        params = params_for(ds)
+        p = params_for(ds)
         t0 = time.time()
-        index = build(params, jnp.asarray(X))
+        vi = api.VectorIndex(space=p.space, dim=spec["dim"], capacity=spec["n"],
+                             M=p.M, M0=p.M0, num_layers=p.num_layers,
+                             ef_construction=p.ef_construction,
+                             ef_search=p.ef_search, alpha=p.alpha)
+        vi.add_items(X)
+        index = vi.index
         index.vectors.block_until_ready()
-        _INDEX_CACHE[ds] = (X, params, index, time.time() - t0)
+        _INDEX_CACHE[ds] = (X, vi.params, index, time.time() - t0)
     return _INDEX_CACHE[ds][:3]
 
 

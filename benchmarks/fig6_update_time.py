@@ -9,7 +9,7 @@ import os
 
 import numpy as np
 
-from repro.core import VARIANTS
+from repro.core.strategies import BUILTIN_STRATEGIES as VARIANTS
 from repro.data import clustered_vectors
 
 from .common import ChurnDriver, DATASETS, csv_row, save_result

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import os
 
-from repro.core import VARIANTS
+from repro.core.strategies import BUILTIN_STRATEGIES as VARIANTS
 from repro.data import clustered_vectors
 
 from .common import ChurnDriver, DATASETS, csv_row, save_result

@@ -8,17 +8,19 @@ batch latency, and recall@10 under churn vs the sequential
 ``delete_and_update_batch`` baseline path.
 
   PYTHONPATH=src python benchmarks/serving_bench.py
+  PYTHONPATH=src python benchmarks/serving_bench.py --dry-run   # CI smoke
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (HNSWParams, batch_knn, build, delete_and_update_batch)
+from repro import api
+from repro.core import batch_knn, delete_and_update_batch
 from repro.data import brute_force_knn, clustered_vectors
-from repro.serving import ServingEngine
 
 from common import SCALE, save_result
 
@@ -64,10 +66,9 @@ def recall(lab, gt, k):
                           for i in range(lab.shape[0])]))
 
 
-def run_engine(params, index, X0, stream, Q, warmup_rounds=1):
-    """Drive the engine over the op stream; returns measured stats."""
-    engine = ServingEngine(params, index, k=K, max_batch=32,
-                           max_ops_per_drain=128)
+def run_engine(vindex, X0, stream, Q, warmup_rounds=1):
+    """Drive the facade's engine over the op stream; returns measured stats."""
+    engine = vindex.serve(k=K, max_batch=32, max_ops_per_drain=128)
     served = 0
     lags = []
     t_measured = 0.0
@@ -113,16 +114,21 @@ def run_baseline(params, index, stream, Q):
 
 
 def main():
-    n = int(1500 * SCALE)
-    dim = 64
-    rounds = 4
-    params = HNSWParams(M=8, M0=16, num_layers=4, ef_construction=64,
-                        ef_search=64)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny corpus, no results file")
+    args = ap.parse_args()
+    n = 200 if args.dry_run else int(1500 * SCALE)
+    dim = 16 if args.dry_run else 64
+    rounds = 2 if args.dry_run else 4
     X0 = clustered_vectors(n, dim, seed=0)
     Q = clustered_vectors(64, dim, seed=1)
     print(f"building index over {n} x {dim} ...", flush=True)
-    index = build(params, jnp.asarray(X0))
-    index.vectors.block_until_ready()
+    vindex = api.create(space="l2", dim=dim, capacity=n, M=8,
+                        ef_construction=64, strategy="mn_ru_gamma",
+                        ef_search=64)
+    vindex.add_items(X0)
+    params, index = vindex.params, vindex.index
 
     results = {}
     print(f"{'ratio':>6} {'upd/rnd':>8} {'q/rnd':>6} {'qps':>10} "
@@ -135,7 +141,7 @@ def main():
         # stream differ between runs and the saved results non-comparable)
         stream = op_stream(n, dim, rounds, upd, seed=ridx)
         Qr = Q[:nq]
-        stats = run_engine(params, index, X0, stream, Qr)
+        stats = run_engine(vindex, X0, stream, Qr)
         gt = live_ground_truth(X0, stream, rounds, Qr, K)
         rec_engine = recall(stats.pop("labels"), gt, K)
         rec_base = recall(run_baseline(params, index, stream, Qr), gt, K)
@@ -150,6 +156,9 @@ def main():
         assert rec_engine >= rec_base - 1e-6, \
             f"{name}: engine recall {rec_engine} < baseline {rec_base}"
 
+    if args.dry_run:
+        print("dry run: skipping results file")
+        return
     save_result("serving_bench", {"n": n, "dim": dim, "rounds": rounds,
                                   "k": K, "ratios": results})
     print("saved -> experiments/results/serving_bench.json")

@@ -1,45 +1,52 @@
-"""Quickstart: build an MN-RU HNSW index, query it, update it in real time.
+"""Quickstart: the `repro.api` facade — build, query, filter, update, grow.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import (HNSWParams, batch_knn, build, count_unreachable,
-                        delete_and_update_batch)
+from repro import api
+from repro.core import count_unreachable
 from repro.data import brute_force_knn, clustered_vectors
 
 
 def main():
-    # 1. data + index
+    # 1. create + ingest (capacity is a hint — pow2-rounded, auto-grown)
     X = clustered_vectors(n=2000, d=64, seed=0)
-    params = HNSWParams(M=8, M0=16, num_layers=4, ef_construction=64,
-                        ef_search=64)
-    index = build(params, jnp.asarray(X))
-    print(f"built index over {X.shape}; entry={int(index.entry)}")
+    vi = api.create(space="l2", dim=64, capacity=2000, M=8,
+                    ef_construction=64, strategy="mn_ru_gamma", ef_search=64)
+    vi.add_items(X)                       # labels default to 0..n-1
+    print(f"built {vi!r}")
 
     # 2. batched k-NN queries
     Q = clustered_vectors(16, 64, seed=1)
-    labels, ids, dists = batch_knn(params, index, jnp.asarray(Q), k=10)
+    labels, dists = vi.knn_query(Q, k=10)
     gt = brute_force_knn(X, Q, 10)
-    recall = np.mean([len(set(np.asarray(labels[i])) & set(gt[i])) / 10
+    recall = np.mean([len(set(labels[i]) & set(gt[i])) / 10
                       for i in range(16)])
     print(f"recall@10 vs exact: {recall:.3f}")
 
-    # 3. real-time updates: delete 50 points, replace with 50 new ones
-    #    (one fused jit program; variant = the paper's MN-RU-gamma)
-    del_labels = jnp.arange(50, dtype=jnp.int32)
-    new_vecs = jnp.asarray(clustered_vectors(50, 64, seed=2))
-    new_labels = jnp.arange(2000, 2050, dtype=jnp.int32)
-    index = delete_and_update_batch(params, index, del_labels, new_vecs,
-                                    new_labels, variant="mn_ru_gamma")
+    # 3. filtered (predicate) k-NN: results come only from the allow-list,
+    #    evaluated inside the beam search — no post-filter recall loss
+    evens = np.arange(0, 2000, 2)
+    flabels, _ = vi.knn_query(Q, k=5, filter=evens)
+    print("filtered query returns only even labels:",
+          bool(np.isin(flabels[flabels >= 0], evens).all()))
 
-    labels2, _, _ = batch_knn(params, index, new_vecs[:8], k=1)
-    print("new points find themselves:",
-          np.asarray(labels2[:, 0]).tolist())
-    u_ind, u_bfs = count_unreachable(index)
+    # 4. real-time updates: markDelete 50 points, replaced_update 50 new
+    #    ones through the paper's MN-RU-gamma repair (vi.strategy)
+    vi.mark_deleted(np.arange(50))
+    new_vecs = clustered_vectors(50, 64, seed=2)
+    new_labels = vi.replace_items(new_vecs, np.arange(2000, 2050))
+
+    labels2, _ = vi.knn_query(new_vecs[:8], k=1)
+    print("new points find themselves:", labels2[:, 0].tolist())
+    u_ind, u_bfs = count_unreachable(vi.index)   # .index = functional core
     print(f"unreachable points after churn: indeg={int(u_ind)} "
           f"bfs={int(u_bfs)}")
+
+    # 5. growth past capacity is automatic (pow2 repack, graph preserved)
+    vi.add_items(clustered_vectors(100, 64, seed=3))
+    print(f"after growth: {vi!r}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,10 @@
-"""RAG-style serving: an LM produces document/query embeddings, the MN-RU
-index serves retrieval with real-time document edits (the paper's RAG
-motivation: edited documents must be re-indexed without going unreachable).
+"""RAG-style serving on the `repro.api` facade: an LM produces document and
+query embeddings, a cosine-space :class:`~repro.api.VectorIndex` serves
+retrieval with real-time document edits (the paper's RAG motivation: edited
+documents must be re-indexed without going unreachable). The facade owns
+normalisation, the replaced_update strategy, and — via ``DualIndexManager``
+underneath ``repro.core`` — stays available for drivers that want the
+paper's explicit tau-rebuild loop (see ``repro.launch.serve --backup``).
 
   PYTHONPATH=src python examples/rag_serving.py
 """
@@ -8,15 +12,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_smoke_config
-from repro.core import (HNSWParams, DualIndexManager, build,
-                        count_unreachable)
+from repro.core import count_unreachable
 from repro.data import lm_token_batch
 from repro.models import transformer
 
 
 def embed_texts(cfg, params, tokens):
-    """Mean-pooled final hidden state as the document embedding."""
+    """Mean-pooled final hidden state as the document embedding (raw — the
+    cosine-space facade normalises at ingest)."""
     hidden, _ = transformer.forward_hidden(cfg, params, tokens)
     return np.array(jnp.mean(hidden.astype(jnp.float32), axis=1))
 
@@ -26,39 +31,43 @@ def main():
     lm_params = transformer.init_params(cfg, jax.random.PRNGKey(0))
 
     # corpus: 512 synthetic "documents" of 32 tokens
-    docs = jnp.asarray(lm_token_batch(cfg.vocab_size, 512, 31, seed=0))
+    n_docs = 512
+    docs = jnp.asarray(lm_token_batch(cfg.vocab_size, n_docs, 31, seed=0))
     emb = embed_texts(cfg, lm_params, docs)
-    emb /= np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
     print(f"embedded corpus: {emb.shape}")
 
-    hp = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=64,
-                    ef_search=64)
-    index = build(hp, jnp.asarray(emb))
-    mgr = DualIndexManager(hp, index, tau=100, backup_capacity=64)
+    vindex = api.create(space="cosine", dim=emb.shape[1], capacity=n_docs,
+                        M=8, ef_construction=64, strategy="mn_ru_gamma",
+                        num_layers=3, ef_search=64)
+    vindex.add_items(emb)
 
-    # user edits 40 documents -> delete + re-embed + re-insert
+    # user edits 40 documents -> delete + re-embed + replaced_update
     edited = jnp.asarray(lm_token_batch(cfg.vocab_size, 40, 31, seed=7))
     new_emb = embed_texts(cfg, lm_params, edited)
-    new_emb /= np.linalg.norm(new_emb, axis=1, keepdims=True) + 1e-9
-    mgr.replaced_update_batch(
-        jnp.arange(40, dtype=jnp.int32), jnp.asarray(new_emb),
-        jnp.arange(512, 552, dtype=jnp.int32), "mn_ru_gamma")
-    u_ind, u_bfs = count_unreachable(mgr.index)
+    vindex.mark_deleted(np.arange(40))
+    new_labels = vindex.replace_items(new_emb, np.arange(n_docs, n_docs + 40))
+    u_ind, u_bfs = count_unreachable(vindex.index)
     print(f"after 40 live edits: unreachable indeg={int(u_ind)} "
-          f"bfs={int(u_bfs)}")
+          f"bfs={int(u_bfs)} — {vindex!r}")
 
-    # retrieval for queries (dualSearch covers any unreachable stragglers)
+    # retrieval for queries
     queries = jnp.asarray(lm_token_batch(cfg.vocab_size, 8, 31, seed=9))
     q_emb = embed_texts(cfg, lm_params, queries)
-    q_emb /= np.linalg.norm(q_emb, axis=1, keepdims=True) + 1e-9
-    labels, dists = mgr.search(jnp.asarray(q_emb), k=5)
+    labels, dists = vindex.knn_query(q_emb, k=5)
     print("retrieved doc ids per query:")
     for i in range(4):
-        print("  q%02d ->" % i, np.asarray(labels[i]).tolist())
+        print("  q%02d ->" % i, labels[i].tolist())
+
     # edited docs retrievable by their own embedding
-    self_labels, _ = mgr.search(jnp.asarray(new_emb[:8]), k=1)
-    hits = int((np.asarray(self_labels)[:, 0] >= 512).sum())
+    self_labels, _ = vindex.knn_query(new_emb[:8], k=1)
+    hits = int((self_labels[:, 0] >= n_docs).sum())
     print(f"edited docs retrievable: {hits}/8")
+
+    # predicate retrieval: only the freshly edited collection
+    f_labels, _ = vindex.knn_query(q_emb, k=3, filter=new_labels)
+    assert np.isin(f_labels[f_labels >= 0], new_labels).all()
+    print("filtered retrieval (edited collection only):",
+          f_labels[0].tolist())
 
 
 if __name__ == "__main__":

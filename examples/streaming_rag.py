@@ -1,64 +1,73 @@
-"""Streaming RAG on the serving engine: live document edits, zero staleness.
+"""Streaming RAG on the `repro.api` facade: live document edits, zero staleness.
 
-An LM embeds a document corpus; the :class:`~repro.serving.ServingEngine`
-serves retrieval while a continuous stream of document edits (delete old
-embedding + replaced_update the re-embedded doc) drains through the fused
-op-tape. Queries always run against a stable epoch snapshot — a retrieval
-issued mid-edit-burst sees either the old corpus or the new one, never a
-half-applied batch — and the final report shows the epoch/batching metrics.
+An LM embeds a document corpus into a cosine-space
+:class:`~repro.api.VectorIndex` (the facade unit-normalises at ingest), and
+``.serve()`` hands it to the serving engine: a continuous stream of document
+edits (delete old embedding + replaced_update the re-embedded doc) drains
+through the fused op-tape while retrieval always runs against a stable epoch
+snapshot — a query issued mid-edit-burst sees either the old corpus or the
+new one, never a half-applied batch. A filtered retrieval at the end scopes
+the query to one "collection" of documents without post-filter recall loss.
 
-  PYTHONPATH=src python examples/streaming_rag.py
+  PYTHONPATH=src python examples/streaming_rag.py          # full demo
+  PYTHONPATH=src python examples/streaming_rag.py --tiny   # CI smoke
 """
+import argparse
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_smoke_config
-from repro.core import HNSWParams, build
 from repro.data import lm_token_batch
 from repro.models import transformer
-from repro.serving import ServingEngine
 
 
 def embed_texts(cfg, params, tokens):
-    """Mean-pooled final hidden state as the document embedding."""
+    """Mean-pooled final hidden state as the document embedding (raw — the
+    cosine-space facade normalises at ingest)."""
     hidden, _ = transformer.forward_hidden(cfg, params, tokens)
-    emb = np.array(jnp.mean(hidden.astype(jnp.float32), axis=1))
-    return emb / (np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9)
+    return np.array(jnp.mean(hidden.astype(jnp.float32), axis=1))
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: small corpus, 2 bursts")
+    args = ap.parse_args()
+    n_docs, bursts, edits = (48, 2, 8) if args.tiny else (256, 4, 20)
+
     cfg = get_smoke_config("stablelm-1.6b")
     lm_params = transformer.init_params(cfg, jax.random.PRNGKey(0))
 
-    # corpus: 256 synthetic "documents" of 32 tokens
-    n_docs = 256
     docs = jnp.asarray(lm_token_batch(cfg.vocab_size, n_docs, 31, seed=0))
     emb = embed_texts(cfg, lm_params, docs)
     print(f"embedded corpus: {emb.shape}")
 
-    hp = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=64,
-                    ef_search=64)
-    engine = ServingEngine(hp, build(hp, jnp.asarray(emb)), k=5,
-                           tau=60, backup_capacity=64, max_batch=8,
-                           max_ops_per_drain=32, track_unreachable=True)
+    vindex = api.create(space="cosine", dim=emb.shape[1], capacity=2 * n_docs,
+                        M=8, ef_construction=64, strategy="mn_ru_gamma",
+                        num_layers=3, ef_search=64)
+    vindex.add_items(emb)                       # labels 0..n_docs-1
+    engine = vindex.serve(k=5, tau=60, backup_capacity=64, max_batch=8,
+                          max_ops_per_drain=32, track_unreachable=True)
 
     queries = embed_texts(cfg, lm_params,
                           jnp.asarray(lm_token_batch(cfg.vocab_size, 8, 31,
                                                      seed=9)))
     next_label = n_docs
-    for burst in range(4):
-        # users edit 20 documents -> re-embed, queue delete + replace
-        edit_ids = np.arange(burst * 20, burst * 20 + 20)
-        edited = jnp.asarray(lm_token_batch(cfg.vocab_size, 20, 31,
+    for burst in range(bursts):
+        # users edit documents -> re-embed, queue delete + replace
+        edit_ids = np.arange(burst * edits, (burst + 1) * edits)
+        edited = jnp.asarray(lm_token_batch(cfg.vocab_size, edits, 31,
                                             seed=7 + burst))
         new_emb = embed_texts(cfg, lm_params, edited)
         for eid in edit_ids:
             engine.delete(int(eid))
-        new_labels = np.arange(next_label, next_label + 20)
+        new_labels = np.arange(next_label, next_label + edits)
         for x, nl in zip(new_emb, new_labels):
             engine.update(x, int(nl))
-        next_label += 20
+        next_label += edits
 
         # retrieval issued BEFORE the pump is served at the pre-burst epoch
         tickets = [engine.search(q) for q in queries]
@@ -76,8 +85,18 @@ def main():
         engine.pump()
         hits = sum(int(t.result()[0][0]) in set(new_labels.tolist())
                    for t in self_tickets)
-        print(f"  edited docs retrievable post-publish: {hits}/8 "
-              f"(epoch {self_tickets[0].epoch})")
+        print(f"  edited docs retrievable post-publish: {hits}/"
+              f"{len(self_tickets)} (epoch {self_tickets[0].epoch})")
+
+    # filtered retrieval through the facade: scope the query to the "manual"
+    # collection (first quarter of the original corpus) — the allow-mask is
+    # applied INSIDE the beam search, so recall doesn't decay
+    vindex.mark_deleted(np.arange(edits))       # facade-side churn too
+    collection = np.arange(edits, n_docs // 4 + edits)
+    lab, _ = vindex.knn_query(queries, k=3, filter=collection)
+    ok = np.isin(lab[lab >= 0], collection).all()
+    print(f"filtered retrieval stays inside the collection: {bool(ok)}")
+    assert ok
 
     print(engine.metrics.report())
 

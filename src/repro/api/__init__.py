@@ -1,0 +1,27 @@
+"""`repro.api` — the stable public surface of the vector database.
+
+Everything industry consumes from an ANN index lives here, behind one
+facade (:class:`VectorIndex`) and two extension registries:
+
+  * metric spaces  — ``l2`` / ``ip`` / ``cosine`` built in; add your own
+    with :func:`register_metric`;
+  * update strategies — the paper's ``hnsw_ru`` / ``mn_ru_*`` /
+    ``mn_thn_ru`` family built in; add your own with
+    :func:`register_strategy`.
+
+The functional core (``repro.core``) stays importable for power users; this
+package is the layer examples, benchmarks, and the serving launcher build
+against.
+"""
+from repro.core.metrics import (Metric, get_metric, list_metrics,
+                                register_metric)
+from repro.core.strategies import (UpdateStrategy, get_strategy,
+                                   list_strategies, register_strategy)
+
+from .facade import VectorIndex, create
+
+__all__ = [
+    "VectorIndex", "create",
+    "Metric", "get_metric", "list_metrics", "register_metric",
+    "UpdateStrategy", "get_strategy", "list_strategies", "register_strategy",
+]

@@ -1,8 +1,20 @@
-"""Paper core: tensorised HNSW with real-time updates (MN-RU family)."""
-from .index import HNSWIndex, HNSWParams, empty_index, sample_level
+"""Paper core: tensorised HNSW with real-time updates (MN-RU family).
+
+This is the FUNCTIONAL layer — pure pytree-in/pytree-out building blocks.
+The supported public entry point is the :mod:`repro.api` facade
+(``repro.api.VectorIndex``); everything here stays importable for power
+users (sharding, custom jits) and for the pre-redesign call sites, a few of
+which now resolve through deprecation shims (see ``_DEPRECATED`` below).
+"""
+from .index import (HNSWIndex, HNSWParams, empty_index, resize_index,
+                    sample_level)
+from .metrics import (Metric, dist_pairwise, dist_point, get_metric,
+                      list_metrics, register_metric)
+from .strategies import (UpdateStrategy, get_strategy, list_strategies,
+                         register_strategy)
 from .hnsw import build, insert, insert_jit
 from .search import batch_knn, greedy_layer, knn_search, search_layer
-from .update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE, VARIANTS,
+from .update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
                      apply_update_batch, apply_update_batch_jit,
                      delete_and_update_batch, first_deleted_slot,
                      first_free_slot, mark_delete, mark_delete_jit,
@@ -14,15 +26,36 @@ from .backup import (DualIndexManager, batch_dual_search, dual_search,
                      rebuild_backup)
 
 __all__ = [
-    "HNSWIndex", "HNSWParams", "empty_index", "sample_level",
+    # index state + params
+    "HNSWIndex", "HNSWParams", "empty_index", "resize_index", "sample_level",
+    # metric registry
+    "Metric", "dist_pairwise", "dist_point", "get_metric", "list_metrics",
+    "register_metric",
+    # update-strategy registry
+    "UpdateStrategy", "get_strategy", "list_strategies", "register_strategy",
+    # construction
     "build", "insert", "insert_jit",
+    # search
     "batch_knn", "greedy_layer", "knn_search", "search_layer",
+    # updates (op tape + replaced_update family)
     "OP_DELETE", "OP_INSERT", "OP_NOP", "OP_REPLACE",
     "apply_update_batch", "apply_update_batch_jit",
-    "VARIANTS", "delete_and_update_batch", "first_deleted_slot",
-    "first_free_slot", "mark_delete", "mark_delete_jit", "num_deleted",
+    "delete_and_update_batch", "first_deleted_slot", "first_free_slot",
+    "mark_delete", "mark_delete_jit", "num_deleted",
     "replaced_update", "replaced_update_jit", "slot_of_label",
+    # reachability
     "bfs_reachable", "bfs_unreachable", "count_unreachable", "indegree",
     "indegree_unreachable",
+    # backup + dualSearch
     "DualIndexManager", "batch_dual_search", "dual_search", "rebuild_backup",
 ]
+
+# pre-redesign ``VARIANTS`` served lazily with a DeprecationWarning — it is
+# superseded by the strategy registry
+from .strategies import variants_deprecation_shim as _shim
+
+__getattr__ = _shim(__name__)
+
+
+def __dir__():
+    return sorted(set(__all__) | {"VARIANTS"} | set(globals()))

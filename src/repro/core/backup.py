@@ -54,7 +54,16 @@ def rebuild_backup(params: HNSWParams, index: HNSWIndex, capacity: int,
 def dual_search(params_main: HNSWParams, main: HNSWIndex,
                 params_backup: HNSWParams, backup: HNSWIndex,
                 q: jax.Array, k: int, ef: int | None = None):
-    """Algorithm 1 (dualSearch): query both indexes, merge by distance."""
+    """Algorithm 1 (dualSearch): query both indexes, merge by distance.
+
+    Metric-agnostic: both searches dispatch on their params' ``space`` and
+    the merge only compares distances — but the two spaces must MATCH or
+    the merged ordering is meaningless (checked at trace time).
+    """
+    if params_main.space != params_backup.space:
+        raise ValueError(
+            f"dualSearch cannot merge across metric spaces: main is "
+            f"{params_main.space!r}, backup is {params_backup.space!r}")
     lm, im, dm = knn_search(params_main, main, q, k, ef)
     lb, ib, db = knn_search(params_backup, backup, q, k, ef)
     labels = jnp.concatenate([lm, lb])

@@ -1,33 +1,23 @@
 """Shared numeric utilities for the tensorised HNSW core.
 
-Everything here is pure jnp, shape-static, and jit/vmap friendly. Distances
-are squared L2 throughout (the paper's datasets are L2; squared preserves
-ordering and saves the sqrt).
+Everything here is pure jnp, shape-static, and jit/vmap friendly. Distance
+kernels live in :mod:`~repro.core.metrics` (pluggable l2/ip/cosine spaces);
+the squared-L2 names are re-exported here for the pre-metric-registry call
+sites.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .metrics import (dist_pairwise, dist_point, sqdist_pairwise,  # noqa: F401
+                      sqdist_point)
+
+# legacy alias (seed name for the L2 pairwise kernel)
+pairwise_sqdist = sqdist_pairwise
+
 INF = jnp.float32(jnp.inf)
 INVALID = jnp.int32(-1)
-
-
-def sqdist_point(q: jax.Array, X: jax.Array) -> jax.Array:
-    """Squared L2 distance from one query ``q[d]`` to rows of ``X[..., d]``."""
-    diff = X - q
-    return jnp.sum(diff * diff, axis=-1)
-
-
-def pairwise_sqdist(A: jax.Array, B: jax.Array) -> jax.Array:
-    """Pairwise squared L2 ``[n, m]`` between ``A[n, d]`` and ``B[m, d]``.
-
-    Matmul (MXU) form: ||a||^2 + ||b||^2 - 2 a.b, clamped at 0 for numerics.
-    """
-    na = jnp.sum(A * A, axis=-1, keepdims=True)          # [n, 1]
-    nb = jnp.sum(B * B, axis=-1, keepdims=True).T        # [1, m]
-    d = na + nb - 2.0 * (A @ B.T)
-    return jnp.maximum(d, 0.0)
 
 
 def masked_gather_rows(X: jax.Array, ids: jax.Array) -> jax.Array:

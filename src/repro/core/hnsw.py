@@ -14,7 +14,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .common import INF, INVALID, sqdist_point
+from .common import INF, INVALID
+from .metrics import dist_point
 from .index import HNSWIndex, HNSWParams, empty_index, sample_level
 from .prune import select_neighbors
 from .search import greedy_layer, search_layer
@@ -52,8 +53,10 @@ def add_reverse_edges(params: HNSWParams, nbrs_layer: jax.Array,
         cand_ids = jnp.concatenate([row, jnp.array([pid], jnp.int32)])
         cand_vecs = vectors[jnp.clip(cand_ids, 0)]
         q = vectors[e_c]
-        cand_d = jnp.where(cand_ids >= 0, sqdist_point(q, cand_vecs), INF)
-        sel, _ = select_neighbors(q, cand_ids, cand_vecs, cand_d, m_l, alpha)
+        cand_d = jnp.where(cand_ids >= 0,
+                           dist_point(params.space, q, cand_vecs), INF)
+        sel, _ = select_neighbors(q, cand_ids, cand_vecs, cand_d, m_l, alpha,
+                                  params.space)
         shrunk = _pad_row(sel, M0)
         new_row = jnp.where(already, row, jnp.where(has_space, appended, shrunk))
         return jnp.where(e >= 0, new_row, row), e_c
@@ -78,12 +81,17 @@ def connect_at_layer(params: HNSWParams, nbrs: jax.Array, vectors: jax.Array,
     ok = ids >= 0
     if exclude_self:
         ok &= ids != pid
-    ok &= ~deleted[jnp.clip(ids, 0)]
+    # prefer live candidates; when EVERY candidate is mark-deleted, link
+    # through the deleted ones anyway (hnswlib semantics) — otherwise the
+    # new point comes up with zero edges and is unreachable from the entry
+    alive = ok & ~deleted[jnp.clip(ids, 0)]
+    ok = jnp.where(jnp.any(alive), alive, ok)
     dists = jnp.where(ok, dists, INF)
     ids = jnp.where(ok, ids, INVALID)
 
     cand_vecs = vectors[jnp.clip(ids, 0)]
-    sel, _ = select_neighbors(x, ids, cand_vecs, dists, m_l, alpha)
+    sel, _ = select_neighbors(x, ids, cand_vecs, dists, m_l, alpha,
+                              params.space)
 
     layer_nbrs = nbrs[layer].at[pid].set(_pad_row(sel, params.M0))
     layer_nbrs = add_reverse_edges(params, layer_nbrs, vectors, pid, sel,

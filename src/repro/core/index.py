@@ -36,6 +36,7 @@ class HNSWParams:
     ef_search: int = 32
     alpha: float = 1.0         # alpha-RNG pruning parameter
     max_search_steps: int = 0  # 0 => 4*ef + 32
+    space: str = "l2"          # metric space (see core.metrics registry)
 
     def m_for_layer(self, layer: int) -> int:
         return self.M0 if layer == 0 else self.M
@@ -84,6 +85,37 @@ def empty_index(params: HNSWParams, capacity: int, dim: int,
         max_layer=jnp.int32(-1),
         count=jnp.int32(0),
         rng=rng,
+    )
+
+
+def resize_index(index: HNSWIndex, new_capacity: int) -> HNSWIndex:
+    """Repack the pytree into a larger capacity (a no-op when not larger).
+
+    Slot ids are stable — the adjacency references slots by index and new
+    slots are appended at the tail as free (-1) entries — so the graph,
+    entry point, and count carry over unchanged. Callers grow to powers of
+    two so the per-capacity jit specialisations stay bounded.
+    """
+    cap = index.capacity
+    if new_capacity <= cap:
+        return index
+    pad = new_capacity - cap
+    L, _, M0 = index.neighbors.shape
+    return HNSWIndex(
+        vectors=jnp.concatenate(
+            [index.vectors, jnp.zeros((pad, index.dim), index.vectors.dtype)]),
+        labels=jnp.concatenate(
+            [index.labels, jnp.full((pad,), -1, jnp.int32)]),
+        levels=jnp.concatenate(
+            [index.levels, jnp.full((pad,), -1, jnp.int32)]),
+        neighbors=jnp.concatenate(
+            [index.neighbors, jnp.full((L, pad, M0), -1, jnp.int32)], axis=1),
+        deleted=jnp.concatenate(
+            [index.deleted, jnp.zeros((pad,), jnp.bool_)]),
+        entry=index.entry,
+        max_layer=index.max_layer,
+        count=index.count,
+        rng=index.rng,
     )
 
 

@@ -1,0 +1,126 @@
+"""Metric-space registry: pluggable distance functions for the HNSW core.
+
+The seed hardcoded squared L2 everywhere; this registry makes the space a
+static property of :class:`~repro.core.index.HNSWParams` (``space="l2"``)
+so every jitted program specialises on it at trace time — zero runtime
+dispatch cost, one compiled program per space.
+
+Built-in spaces (hnswlib-compatible naming):
+
+  * ``l2``     — squared L2 ``||q - x||^2`` (ordering-equivalent to L2).
+  * ``ip``     — inner-product distance ``1 - <q, x>`` (smaller = more
+                 similar; can go negative for un-normalised vectors, which
+                 is fine — every consumer orders by ascending distance with
+                 ``INF`` padding).
+  * ``cosine`` — same distance function as ``ip``; the *facade* unit-
+                 normalises vectors and queries at ingest
+                 (``normalize_ingest=True``), so ``1 - <q, x>`` IS the
+                 cosine distance. The core never pays a per-distance
+                 normalisation.
+
+Third-party spaces register via :func:`register_metric`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def sqdist_point(q: jax.Array, X: jax.Array) -> jax.Array:
+    """Squared L2 distance from one query ``q[d]`` to rows of ``X[..., d]``.
+
+    Accumulates in float32 whatever the storage dtype (f16/bf16 payloads
+    still get f32 distances — the search carries compare against f32 INF).
+    """
+    diff = X - q
+    return jnp.sum(diff * diff, axis=-1, dtype=jnp.float32)
+
+
+def sqdist_pairwise(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Pairwise squared L2 ``[n, m]`` between ``A[n, d]`` and ``B[m, d]``.
+
+    Matmul (MXU) form: ||a||^2 + ||b||^2 - 2 a.b, clamped at 0 for numerics.
+    """
+    na = jnp.sum(A * A, axis=-1, keepdims=True, dtype=jnp.float32)  # [n, 1]
+    nb = jnp.sum(B * B, axis=-1, keepdims=True, dtype=jnp.float32).T
+    d = na + nb - 2.0 * (A @ B.T).astype(jnp.float32)
+    return jnp.maximum(d, 0.0)
+
+
+def ipdist_point(q: jax.Array, X: jax.Array) -> jax.Array:
+    """Inner-product distance ``1 - <q, x>`` to rows of ``X[..., d]``
+    (f32 accumulation, like :func:`sqdist_point`)."""
+    return 1.0 - jnp.sum(X * q, axis=-1, dtype=jnp.float32)
+
+
+def ipdist_pairwise(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Pairwise inner-product distance ``[n, m]``: ``1 - A @ B.T``."""
+    return 1.0 - (A @ B.T).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One metric space: distance kernels + ingest policy.
+
+    ``point_fn(q[d], X[..., d]) -> [...]`` and
+    ``pairwise_fn(A[n, d], B[m, d]) -> [n, m]`` must be pure jnp,
+    shape-static, and order results ascending-is-closer with ``INF`` as the
+    invalid sentinel. ``normalize_ingest`` tells the facade / serving layer
+    to unit-normalise vectors and queries before they reach the core.
+    """
+    name: str
+    point_fn: Callable[[jax.Array, jax.Array], jax.Array]
+    pairwise_fn: Callable[[jax.Array, jax.Array], jax.Array]
+    normalize_ingest: bool = False
+
+
+_METRICS: dict[str, Metric] = {}
+
+
+def register_metric(metric: Metric, *, overwrite: bool = False) -> Metric:
+    """Register a metric space under ``metric.name``; returns it."""
+    if metric.name in _METRICS and not overwrite:
+        raise ValueError(f"metric space {metric.name!r} is already "
+                         f"registered; pass overwrite=True to replace it")
+    _METRICS[metric.name] = metric
+    return metric
+
+
+def get_metric(space: str) -> Metric:
+    """Look up a registered metric space (uniform error on miss)."""
+    try:
+        return _METRICS[space]
+    except KeyError:
+        raise ValueError(
+            f"unknown metric space {space!r}; registered spaces: "
+            f"{list_metrics()}") from None
+
+
+def list_metrics() -> tuple[str, ...]:
+    return tuple(sorted(_METRICS))
+
+
+def dist_point(space: str, q: jax.Array, X: jax.Array) -> jax.Array:
+    """Distance from ``q[d]`` to rows of ``X[..., d]`` in ``space``."""
+    return get_metric(space).point_fn(q, X)
+
+
+def dist_pairwise(space: str, A: jax.Array, B: jax.Array) -> jax.Array:
+    """Pairwise distances ``[n, m]`` in ``space``."""
+    return get_metric(space).pairwise_fn(A, B)
+
+
+def normalize_rows(X, eps: float = 1e-12):
+    """Unit-normalise rows (numpy or jnp); zero rows stay zero-ish."""
+    norms = (X * X).sum(axis=-1, keepdims=True) ** 0.5
+    return X / jnp.maximum(norms, eps) if isinstance(X, jax.Array) \
+        else X / (norms + eps)
+
+
+register_metric(Metric("l2", sqdist_point, sqdist_pairwise))
+register_metric(Metric("ip", ipdist_point, ipdist_pairwise))
+register_metric(Metric("cosine", ipdist_point, ipdist_pairwise,
+                       normalize_ingest=True))

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import INF, INVALID, dedup_ids
+from .metrics import dist_point
 
 
 def select_neighbors(
@@ -29,11 +30,13 @@ def select_neighbors(
     cand_dists: jax.Array,    # [C] f32 distance(q, candidate), INF = invalid
     m_out: int,
     alpha: float = 1.0,
+    space: str = "l2",
 ) -> tuple[jax.Array, jax.Array]:
     """Select up to ``m_out`` neighbours by the alpha-RNG rule.
 
     Returns ``(ids[m_out], dists[m_out])`` padded with (-1, INF), sorted by
-    ascending distance to the query.
+    ascending distance to the query. ``space`` picks the metric for the
+    candidate-to-candidate dominance distances (must match ``cand_dists``).
     """
     C, d = cand_vecs.shape
     cand_ids, cand_dists = dedup_ids(cand_ids, cand_dists)
@@ -50,8 +53,7 @@ def select_neighbors(
     def body(state):
         i, selected, sel_vecs, count = state
         v = vecs[i]
-        diff = sel_vecs - v                                   # [m_out, d]
-        dd = jnp.sum(diff * diff, axis=-1)                    # d(r, c_i)
+        dd = dist_point(space, v, sel_vecs)                   # d(r, c_i)
         active = jnp.arange(m_out) < count
         dom = jnp.any(active & (alpha * dd <= dq[i]))
         keep = (~dom) & (dq[i] < INF)
@@ -79,7 +81,8 @@ def alpha_rng_select(
     cand_vecs: jax.Array,     # [C, d] candidate vectors
     m_out: int,
     alpha: float,
+    space: str = "l2",
 ) -> tuple[jax.Array, jax.Array]:
     """Back-compat wrapper (vector-based since the lazy-scan rewrite)."""
     return select_neighbors(None, cand_ids, cand_vecs, cand_dists, m_out,
-                            alpha)
+                            alpha, space)

@@ -6,6 +6,17 @@ expansion is a dense ``[M0, d]`` gather + contraction, and the candidate/result
 split is implicit — any unexpanded entry inside the sorted top-ef beam is a
 candidate; entries pushed past ef by the merge-sort are exactly the ones the
 classical algorithm would discard (`c > f` break).
+
+Distances dispatch statically on ``params.space`` through the metric
+registry (:mod:`~repro.core.metrics`), so each space compiles its own
+program with the kernel inlined.
+
+Filtered search: an optional slot-level ``allow`` mask threads a SECOND
+fixed-size beam through the traversal — the walk still expands through
+disallowed points (they carry graph connectivity, like markDeleted points),
+but only allowed points are merged into the result beam. That is hnswlib's
+filter-functor semantics pushed into candidate scoring: predicate kNN keeps
+full recall instead of post-filtering k results down to a remnant.
 """
 from __future__ import annotations
 
@@ -14,8 +25,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .common import INF, INVALID, sqdist_point
+from .common import INF, INVALID
 from .index import HNSWIndex, HNSWParams
+from .metrics import dist_point
 
 
 def greedy_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
@@ -32,7 +44,7 @@ def greedy_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
         nbrs = nbrs_l[cur]
         valid = nbrs >= 0
         nv = index.vectors[jnp.clip(nbrs, 0)]
-        nd = jnp.where(valid, sqdist_point(q, nv), INF)
+        nd = jnp.where(valid, dist_point(params.space, q, nv), INF)
         j = jnp.argmin(nd)
         best_d = nd[j]
         improved = best_d < cur_d
@@ -40,40 +52,50 @@ def greedy_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
         cur_d = jnp.minimum(best_d, cur_d)
         return cur, cur_d, improved
 
-    d0 = sqdist_point(q, index.vectors[jnp.clip(ep, 0)])
+    d0 = dist_point(params.space, q, index.vectors[jnp.clip(ep, 0)])
     cur, _, _ = jax.lax.while_loop(cond, body, (jnp.clip(ep, 0), d0, jnp.bool_(True)))
     return cur
 
 
 def search_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
                  ep: jax.Array, layer: int, ef: int,
-                 max_steps: int | None = None) -> tuple[jax.Array, jax.Array]:
+                 max_steps: int | None = None,
+                 allow: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
     """Beam search at ``layer``; returns ``(ids[ef], dists[ef])`` sorted asc.
 
     Traverses through deleted points (hnswlib semantics) — the caller filters
-    deleted ids out of returned results.
+    deleted ids out of returned results. With ``allow`` (bool[N] slot mask),
+    traversal is unchanged but the returned beam contains only allowed slots.
     """
     N = index.capacity
     M0 = params.M0
     steps_cap = max_steps if max_steps is not None else params.steps_for(ef)
     nbrs_l = index.neighbors[layer]
+    filtered = allow is not None
 
     ep = jnp.clip(ep, 0)
-    d0 = sqdist_point(q, index.vectors[ep])
+    d0 = dist_point(params.space, q, index.vectors[ep])
     dists = jnp.full((ef,), INF).at[0].set(d0)
     ids = jnp.full((ef,), INVALID, jnp.int32).at[0].set(ep)
     expanded = jnp.zeros((ef,), jnp.bool_)
     visited = jnp.zeros((N,), jnp.bool_).at[ep].set(True)
+    if filtered:
+        ep_ok = allow[ep]
+        res_d = jnp.full((ef,), INF).at[0].set(jnp.where(ep_ok, d0, INF))
+        res_i = jnp.full((ef,), INVALID, jnp.int32).at[0].set(
+            jnp.where(ep_ok, ep, INVALID))
+    else:
+        res_d = res_i = None
 
     def frontier(dists, ids, expanded):
         return jnp.where(expanded | (ids < 0), INF, dists)
 
     def cond(state):
-        dists, ids, expanded, visited, steps = state
+        dists, ids, expanded, visited, steps = state[:5]
         return (jnp.min(frontier(dists, ids, expanded)) < INF) & (steps < steps_cap)
 
     def body(state):
-        dists, ids, expanded, visited, steps = state
+        dists, ids, expanded, visited, steps = state[:5]
         f = frontier(dists, ids, expanded)
         i = jnp.argmin(f)
         cur = jnp.clip(ids[i], 0)
@@ -87,18 +109,30 @@ def search_layer(params: HNSWParams, index: HNSWIndex, q: jax.Array,
         visited = visited.at[jnp.where(valid, nc, N)].set(True, mode="drop")
 
         nv = index.vectors[nc]                        # [M0, d]
-        nd = jnp.where(fresh, sqdist_point(q, nv), INF)
+        nd = jnp.where(fresh, dist_point(params.space, q, nv), INF)
 
         all_d = jnp.concatenate([dists, nd])
         all_i = jnp.concatenate([ids, jnp.where(fresh, nc, INVALID)])
         all_e = jnp.concatenate([expanded, jnp.zeros((M0,), jnp.bool_)])
         order = jnp.argsort(all_d)
-        return (all_d[order][:ef], all_i[order][:ef], all_e[order][:ef],
-                visited, steps + 1)
+        out = (all_d[order][:ef], all_i[order][:ef], all_e[order][:ef],
+               visited, steps + 1)
+        if filtered:
+            res_d, res_i = state[5:]
+            a_ok = fresh & allow[nc]
+            rd = jnp.concatenate([res_d, jnp.where(a_ok, nd, INF)])
+            ri = jnp.concatenate([res_i, jnp.where(a_ok, nc, INVALID)])
+            r_order = jnp.argsort(rd)
+            out = out + (rd[r_order][:ef], ri[r_order][:ef])
+        return out
 
-    dists, ids, expanded, visited, _ = jax.lax.while_loop(
-        cond, body, (dists, ids, expanded, visited, jnp.int32(0)))
-    return ids, dists
+    init = (dists, ids, expanded, visited, jnp.int32(0))
+    if filtered:
+        init = init + (res_d, res_i)
+    final = jax.lax.while_loop(cond, body, init)
+    if filtered:
+        return final[6], final[5]
+    return final[1], final[0]
 
 
 def _descend(params: HNSWParams, index: HNSWIndex, q: jax.Array,
@@ -117,15 +151,19 @@ def _descend(params: HNSWParams, index: HNSWIndex, q: jax.Array,
 
 
 def knn_search(params: HNSWParams, index: HNSWIndex, q: jax.Array,
-               k: int, ef: int | None = None) -> tuple[jax.Array, jax.Array, jax.Array]:
+               k: int, ef: int | None = None,
+               allow: jax.Array | None = None
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Full HNSW k-NN query. Returns ``(labels[k], slot_ids[k], dists[k])``.
 
     Deleted and free slots are excluded from results (but traversed through).
+    ``allow`` (bool[N] over slots) restricts results to allowed slots without
+    hurting traversal — see :func:`search_layer`.
     """
     ef = ef or params.ef_search
     ef = max(ef, k)
     ep = _descend(params, index, q, jnp.int32(0))
-    ids, dists = search_layer(params, index, q, ep, 0, ef)
+    ids, dists = search_layer(params, index, q, ep, 0, ef, allow=allow)
     ok = (ids >= 0) & ~index.deleted[jnp.clip(ids, 0)] & (index.levels[jnp.clip(ids, 0)] >= 0)
     dists = jnp.where(ok, dists, INF)
     ids = jnp.where(ok, ids, INVALID)
@@ -138,6 +176,12 @@ def knn_search(params: HNSWParams, index: HNSWIndex, q: jax.Array,
 
 @partial(jax.jit, static_argnames=("params", "k", "ef"))
 def batch_knn(params: HNSWParams, index: HNSWIndex, Q: jax.Array,
-              k: int, ef: int | None = None):
-    """vmapped batched query: ``Q[b, d] -> (labels[b,k], ids[b,k], dists[b,k])``."""
-    return jax.vmap(lambda q: knn_search(params, index, q, k, ef))(Q)
+              k: int, ef: int | None = None,
+              allow: jax.Array | None = None):
+    """vmapped batched query: ``Q[b, d] -> (labels[b,k], ids[b,k], dists[b,k])``.
+
+    ``allow`` is one slot mask shared by the whole batch (a per-query mask
+    would defeat the fixed-shape bucketing — split batches by predicate
+    instead).
+    """
+    return jax.vmap(lambda q: knn_search(params, index, q, k, ef, allow))(Q)

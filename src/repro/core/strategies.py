@@ -1,0 +1,109 @@
+"""Update-strategy registry: the paper's replaced_update family, pluggable.
+
+The seed spelled the family as a ``VARIANTS`` tuple plus a config dict,
+with membership checks duplicated across ``core.update`` (twice) and
+``serving.update_queue``. This registry is now the single source of truth:
+the five built-ins register themselves below, every entry point validates
+through :func:`get_strategy` (one uniform error message), and third-party
+strategies plug in via :func:`register_strategy` — either as a new
+(repair_set, candidate_pool, repair_alpha) combination or with a fully
+custom ``repair_fn``.
+
+A strategy name is the unit of jit specialisation: it travels through
+``static_argnames`` as a string and resolves to its config at trace time,
+so registration costs nothing on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+REPAIR_SETS = ("one_hop", "mutual", "mutual_thn")
+CANDIDATE_POOLS = ("two_hop", "per_vertex")
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateStrategy:
+    """One replaced_update repair policy.
+
+    ``repair_set``      — which vertices around the deleted point get their
+                          adjacency rebuilt (paper §III).
+    ``candidate_pool``  — where repair candidates come from: the shared
+                          one-hop ∪ two-hop pool (one amortised MXU matmul)
+                          or the per-vertex N(v) ∪ N(d) ∪ {new} pool.
+    ``repair_alpha``    — alpha-RNG parameter for the repair prune.
+    ``repair_fn``       — optional full override: called as
+                          ``repair_fn(params, nbrs, vectors, deleted, pid,
+                          layer, strategy) -> nbrs`` at trace time instead
+                          of the built-in repair kernel.
+    """
+    name: str
+    repair_set: str = "mutual"
+    candidate_pool: str = "per_vertex"
+    repair_alpha: float = 1.0
+    repair_fn: Callable | None = None
+
+    def __post_init__(self):
+        if self.repair_fn is None:
+            if self.repair_set not in REPAIR_SETS:
+                raise ValueError(f"repair_set must be one of {REPAIR_SETS}, "
+                                 f"got {self.repair_set!r}")
+            if self.candidate_pool not in CANDIDATE_POOLS:
+                raise ValueError(f"candidate_pool must be one of "
+                                 f"{CANDIDATE_POOLS}, got "
+                                 f"{self.candidate_pool!r}")
+
+
+_STRATEGIES: dict[str, UpdateStrategy] = {}
+
+
+def register_strategy(strategy: UpdateStrategy,
+                      *, overwrite: bool = False) -> UpdateStrategy:
+    """Register ``strategy`` under its name; returns it."""
+    if strategy.name in _STRATEGIES and not overwrite:
+        raise ValueError(f"update strategy {strategy.name!r} is already "
+                         f"registered; pass overwrite=True to replace it")
+    _STRATEGIES[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> UpdateStrategy:
+    """Look up a registered strategy (THE uniform unknown-strategy error)."""
+    try:
+        return _STRATEGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown update strategy {name!r}; registered strategies: "
+            f"{list_strategies()}") from None
+
+
+def list_strategies() -> tuple[str, ...]:
+    return tuple(sorted(_STRATEGIES))
+
+
+# the paper's family (seed VARIANTS order preserved in BUILTIN_STRATEGIES)
+register_strategy(UpdateStrategy("hnsw_ru", "one_hop", "two_hop", 1.0))
+register_strategy(UpdateStrategy("mn_ru_alpha", "mutual", "two_hop", 1.0))
+register_strategy(UpdateStrategy("mn_ru_beta", "mutual", "per_vertex", 1.0))
+register_strategy(UpdateStrategy("mn_ru_gamma", "mutual", "per_vertex", 1.1))
+register_strategy(UpdateStrategy("mn_thn_ru", "mutual_thn", "per_vertex", 1.1))
+
+BUILTIN_STRATEGIES = ("hnsw_ru", "mn_ru_alpha", "mn_ru_beta", "mn_ru_gamma",
+                      "mn_thn_ru")
+
+
+def variants_deprecation_shim(module_name: str):
+    """One module-level ``__getattr__`` serving the retired ``VARIANTS``
+    name with a DeprecationWarning (shared by every module that used to
+    export the tuple — the shim is defined once, here)."""
+    def __getattr__(name: str):
+        if name == "VARIANTS":
+            import warnings
+            warnings.warn(
+                f"{module_name}.VARIANTS is deprecated; use "
+                f"repro.api.list_strategies()", DeprecationWarning,
+                stacklevel=2)
+            return BUILTIN_STRATEGIES
+        raise AttributeError(
+            f"module {module_name!r} has no attribute {name!r}")
+    return __getattr__

@@ -24,22 +24,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .common import INF, INVALID, dedup_ids, pairwise_sqdist, sqdist_point
+from .common import INF, INVALID, dedup_ids
 from .index import HNSWIndex, HNSWParams
 from .hnsw import _pad_row, add_reverse_edges, insert
+from .metrics import dist_point
 from .prune import alpha_rng_select, select_neighbors
 from .search import greedy_layer, search_layer
+from .strategies import (BUILTIN_STRATEGIES, UpdateStrategy,  # noqa: F401
+                         get_strategy, list_strategies, register_strategy)
 
-VARIANTS = ("hnsw_ru", "mn_ru_alpha", "mn_ru_beta", "mn_ru_gamma", "mn_thn_ru")
-
-_VARIANT_CFG = {
-    #            repair set,         candidate pool,  repair alpha
-    "hnsw_ru":     ("one_hop",        "two_hop",       1.0),
-    "mn_ru_alpha": ("mutual",         "two_hop",       1.0),
-    "mn_ru_beta":  ("mutual",         "per_vertex",    1.0),
-    "mn_ru_gamma": ("mutual",         "per_vertex",    1.1),
-    "mn_thn_ru":   ("mutual_thn",     "per_vertex",    1.1),
-}
+# back-compat alias: the variant family now lives in core.strategies
+VARIANTS = BUILTIN_STRATEGIES
 
 
 def slot_of_label(index: HNSWIndex, label: jax.Array) -> jax.Array:
@@ -95,7 +90,13 @@ def _repair_layer(params: HNSWParams, nbrs: jax.Array, vectors: jax.Array,
     ``vectors[pid]`` already holds the NEW point's vector; edges touching
     ``pid`` therefore reference the newly inserted point ("label" in Alg. 2).
     """
-    repair_kind, pool_kind, r_alpha = _VARIANT_CFG[variant]
+    strategy = get_strategy(variant)
+    if strategy.repair_fn is not None:
+        return strategy.repair_fn(params, nbrs, vectors, deleted, pid, layer,
+                                  strategy)
+    repair_kind = strategy.repair_set
+    pool_kind = strategy.candidate_pool
+    r_alpha = strategy.repair_alpha
     M0 = params.M0
     m_l = params.m_for_layer(layer)
     N = vectors.shape[0]
@@ -142,11 +143,12 @@ def _repair_layer(params: HNSWParams, nbrs: jax.Array, vectors: jax.Array,
 
         def repair_one(v):
             vc = jnp.clip(v, 0)
-            dq = sqdist_point(vectors[vc], pool_vecs)
+            dq = dist_point(params.space, vectors[vc], pool_vecs)
             ok = pool_ok & (pool != v)
             dq = jnp.where(ok, dq, INF)
             ids = jnp.where(ok, pool, INVALID)
-            sel, _ = alpha_rng_select(ids, dq, pool_vecs, m_l, r_alpha)
+            sel, _ = alpha_rng_select(ids, dq, pool_vecs, m_l, r_alpha,
+                                      params.space)
             new_row = _pad_row(sel, M0)
             return jnp.where(v >= 0, new_row, layer_nbrs[vc]), vc
     else:  # per_vertex: C(v) = N(v) ∪ N(d) ∪ {new}
@@ -157,10 +159,11 @@ def _repair_layer(params: HNSWParams, nbrs: jax.Array, vectors: jax.Array,
             poolc = jnp.clip(pool, 0)
             ok = (pool >= 0) & ~deleted[poolc] & (pool != v)
             pool_vecs = vectors[poolc]
-            dq = jnp.where(ok, sqdist_point(vectors[vc], pool_vecs), INF)
+            dq = jnp.where(ok, dist_point(params.space, vectors[vc],
+                                          pool_vecs), INF)
             ids = jnp.where(ok, pool, INVALID)
             sel, _ = select_neighbors(vectors[vc], ids, pool_vecs, dq, m_l,
-                                      r_alpha)
+                                      r_alpha, params.space)
             new_row = _pad_row(sel, M0)
             return jnp.where(v >= 0, new_row, layer_nbrs[vc]), vc
 
@@ -198,12 +201,15 @@ def _update_reinsert(params: HNSWParams, index: HNSWIndex, x: jax.Array,
             m_l = params.m_for_layer(layer)
             ids, dists = search_layer(params, view, x, ep, layer,
                                       params.ef_construction)
-            ok = (ids >= 0) & (ids != pid) & ~index.deleted[jnp.clip(ids, 0)]
+            ok = (ids >= 0) & (ids != pid)
+            # same all-deleted fallback as construction (see connect_at_layer)
+            alive = ok & ~index.deleted[jnp.clip(ids, 0)]
+            ok = jnp.where(jnp.any(alive), alive, ok)
             dists = jnp.where(ok, dists, INF)
             ids = jnp.where(ok, ids, INVALID)
             cand_vecs = index.vectors[jnp.clip(ids, 0)]
             sel, _ = select_neighbors(x, ids, cand_vecs, dists, m_l,
-                                      insert_alpha)
+                                      insert_alpha, params.space)
             layer_nbrs = nbrs[layer].at[pid].set(_pad_row(sel, params.M0))
             layer_nbrs = add_reverse_edges(params, layer_nbrs, index.vectors,
                                            pid, sel, layer, insert_alpha)
@@ -229,8 +235,7 @@ def replaced_update(params: HNSWParams, index: HNSWIndex, x: jax.Array,
     Falls back to a fresh insert into a free slot when no deleted point
     exists (paper line: "Perform normal insertion").
     """
-    if variant not in _VARIANT_CFG:
-        raise ValueError(f"unknown variant {variant!r}; options: {VARIANTS}")
+    get_strategy(variant)   # uniform unknown-strategy error, fail-fast
     label = jnp.asarray(label, jnp.int32)
     d_slot = first_deleted_slot(index)
 
@@ -298,8 +303,7 @@ def apply_update_batch(params: HNSWParams, index: HNSWIndex, ops: jax.Array,
       OP_INSERT  == insert into the first free slot (no-op when full)
       OP_NOP     == padding
     """
-    if variant not in _VARIANT_CFG:
-        raise ValueError(f"unknown variant {variant!r}; options: {VARIANTS}")
+    get_strategy(variant)   # uniform unknown-strategy error, fail-fast
     ops = jnp.asarray(ops, jnp.int32)
     labels = jnp.asarray(labels, jnp.int32)
 

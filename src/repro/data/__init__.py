@@ -1,6 +1,7 @@
 from .synthetic import (clustered_vectors, lm_token_batch, recsys_batch,
-                        gnn_batch, brute_force_knn)
+                        gnn_batch, brute_force_knn, exact_knn)
 from .pipeline import PrefetchPipeline, SyntheticStream
 
 __all__ = ["clustered_vectors", "lm_token_batch", "recsys_batch", "gnn_batch",
-           "brute_force_knn", "PrefetchPipeline", "SyntheticStream"]
+           "brute_force_knn", "exact_knn", "PrefetchPipeline",
+           "SyntheticStream"]

@@ -32,6 +32,24 @@ def brute_force_knn(X: np.ndarray, Q: np.ndarray, k: int) -> np.ndarray:
     return out
 
 
+def exact_knn(X: np.ndarray, Q: np.ndarray, k: int,
+              space: str = "l2") -> np.ndarray:
+    """Space-aware exact ground truth ids [q, k] (l2 / ip / cosine).
+
+    Mirrors the metric registry's distance definitions: squared L2 for
+    ``l2``, ``1 - <q, x>`` for ``ip``, and ``ip`` over unit-normalised
+    rows for ``cosine``.
+    """
+    if space == "l2":
+        return brute_force_knn(X, Q, k)
+    if space == "cosine":
+        X = X / (np.linalg.norm(X, axis=1, keepdims=True) + 1e-12)
+        Q = Q / (np.linalg.norm(Q, axis=1, keepdims=True) + 1e-12)
+    elif space != "ip":
+        raise ValueError(f"no exact ground truth for space {space!r}")
+    return np.argsort(1.0 - Q @ X.T, axis=1)[:, :k]
+
+
 def lm_token_batch(vocab: int, batch: int, seq: int, seed: int) -> np.ndarray:
     """Zipf-ish synthetic token stream, [batch, seq+1] int32."""
     rng = np.random.default_rng(seed)

@@ -1,27 +1,27 @@
-"""ANN serving driver: the paper's system end-to-end, on ``repro.serving``.
+"""ANN serving driver: the paper's system end-to-end, on ``repro.api``.
 
-Builds an MN-RU HNSW index over a synthetic corpus, then drives a
-:class:`~repro.serving.ServingEngine`: single queries coalesce in the
-micro-batcher, a stream of delete/replace ops drains through the fused
-op-tape, tau-triggered backup rebuilds keep unreachable points servable
-(dualSearch), and every query batch runs against a stable epoch snapshot.
-Reports QPS, update ops/s, update lag, recall@k vs exact brute force, and
-unreachable counts per epoch; ``--metrics-json`` dumps the registry.
+Creates a :class:`~repro.api.VectorIndex` over a synthetic corpus (any
+registered metric space via ``--space``), then hands it to a
+:class:`~repro.serving.ServingEngine` with ``.serve()``: single queries
+coalesce in the micro-batcher, a stream of delete/replace ops drains
+through the fused op-tape, tau-triggered backup rebuilds keep unreachable
+points servable (dualSearch), and every query batch runs against a stable
+epoch snapshot. Reports QPS, update ops/s, update lag, recall@k vs exact
+brute force, and unreachable counts per epoch; ``--metrics-json`` dumps
+the registry.
 
   PYTHONPATH=src python -m repro.launch.serve --n 5000 --dim 64 \
-      --variant mn_ru_gamma --rounds 10 --updates-per-round 100
+      --strategy mn_ru_gamma --rounds 10 --updates-per-round 100
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HNSWParams, VARIANTS, build
-from repro.data import brute_force_knn, clustered_vectors
-from repro.serving import ServingEngine
+from repro import api
+from repro.data import clustered_vectors, exact_knn
 
 
 def main():
@@ -32,7 +32,9 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--ef", type=int, default=64)
     ap.add_argument("--M", type=int, default=8)
-    ap.add_argument("--variant", default="mn_ru_gamma", choices=VARIANTS)
+    ap.add_argument("--space", default="l2", choices=api.list_metrics())
+    ap.add_argument("--strategy", "--variant", dest="strategy",
+                    default="mn_ru_gamma", choices=api.list_strategies())
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--updates-per-round", type=int, default=100)
     ap.add_argument("--backup", action="store_true",
@@ -47,18 +49,19 @@ def main():
     rng = np.random.default_rng(0)
     X = clustered_vectors(args.n, args.dim, seed=0)
     Q = clustered_vectors(args.queries, args.dim, seed=1)
-    params = HNSWParams(M=args.M, M0=2 * args.M, num_layers=4,
-                        ef_construction=args.ef, ef_search=args.ef)
 
-    print(f"building index over {args.n} x {args.dim} ...", flush=True)
+    vindex = api.create(space=args.space, dim=args.dim, capacity=args.n,
+                        M=args.M, ef_construction=args.ef,
+                        strategy=args.strategy, ef_search=args.ef)
+    print(f"building {vindex!r} over {args.n} x {args.dim} ...", flush=True)
     t0 = time.time()
-    index = build(params, jnp.asarray(X))
-    index.vectors.block_until_ready()
+    vindex.add_items(X)
+    vindex.index.vectors.block_until_ready()
     print(f"  built in {time.time() - t0:.1f}s")
 
-    engine = ServingEngine(
-        params, index, k=args.k, variant=args.variant,
-        max_batch=args.max_batch, max_ops_per_drain=args.max_ops_per_drain,
+    engine = vindex.serve(
+        k=args.k, max_batch=args.max_batch,
+        max_ops_per_drain=args.max_ops_per_drain,
         tau=args.tau if args.backup else 0,
         backup_capacity=max(args.n // 8, 64) if args.backup else 0,
         track_unreachable=True)
@@ -106,7 +109,7 @@ def main():
         Xcat = np.concatenate(X_all)
         pre_labels = np.fromiter(pre_live.keys(), dtype=np.int64)
         pre_rows = Xcat[[pre_live[int(l)] for l in pre_labels]]
-        gt = pre_labels[brute_force_knn(pre_rows, Q, args.k)]
+        gt = pre_labels[exact_knn(pre_rows, Q, args.k, args.space)]
         recall = np.mean([len(set(lab_np[i]) & set(gt[i])) / args.k
                           for i in range(len(Q))])
         u = engine.metrics
@@ -129,7 +132,7 @@ def main():
     Xcat = np.concatenate(X_all)
     live_labels = np.fromiter(live.keys(), dtype=np.int64)
     live_rows = Xcat[[live[int(l)] for l in live_labels]]
-    gt = live_labels[brute_force_knn(live_rows, Q, args.k)]
+    gt = live_labels[exact_knn(live_rows, Q, args.k, args.space)]
     recall = np.mean([len(set(lab_np[i]) & set(gt[i])) / args.k
                       for i in range(len(Q))])
     print(f"final recall@{args.k} over live set: {recall:.4f}")

@@ -3,6 +3,11 @@
 Micro-batched queries against immutable epoch snapshots, while a scheduler
 streams mixed delete/replace/insert batches through one fused op-tape
 program and folds tau-triggered backup rebuilds into the maintenance cycle.
+
+The blessed way to construct an engine is
+``repro.api.VectorIndex.serve(...)`` — the facade hands over a built index
+plus its metric space and update strategy; the classes here remain public
+for drivers that manage the pytree themselves.
 """
 from .batcher import MicroBatcher, QueryTicket, bucket_size, pow2_floor
 from .engine import PumpStats, ServingEngine
@@ -17,3 +22,12 @@ __all__ = [
     "EpochSnapshot", "SnapshotStore",
     "UpdateOp", "UpdateScheduler",
 ]
+
+# pre-redesign ``VARIANTS`` re-export served lazily with a DeprecationWarning
+from repro.core.strategies import variants_deprecation_shim as _shim
+
+__getattr__ = _shim(__name__)
+
+
+def __dir__():
+    return sorted(set(__all__) | {"VARIANTS"} | set(globals()))

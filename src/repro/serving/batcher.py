@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.backup import batch_dual_search
 from repro.core.index import HNSWParams
+from repro.core.metrics import get_metric, normalize_rows
 from repro.core.search import batch_knn
 
 from .metrics import MetricsRegistry
@@ -99,6 +100,7 @@ class MicroBatcher:
         # round the cap DOWN to a power of two so every dispatch shape is a
         # pow2 and the compiled-program count stays log2(max_batch)+1
         self.max_batch = pow2_floor(max_batch)
+        self._normalize = get_metric(params.space).normalize_ingest
         self.metrics = metrics or MetricsRegistry()
         self.backup_params = backup_params or params
         self._search_fn = search_fn or self._default_search
@@ -110,6 +112,8 @@ class MicroBatcher:
         q = np.asarray(q, np.float32)
         if q.ndim != 1:
             raise ValueError(f"submit() takes one query vector, got {q.shape}")
+        if self._normalize:                  # cosine: match ingest-side norm
+            q = normalize_rows(q)
         t = QueryTicket(self._next_qid, q)
         self._next_qid += 1
         self._pending.append(t)

@@ -25,8 +25,10 @@ import numpy as np
 
 from repro.core.backup import rebuild_backup
 from repro.core.index import HNSWIndex, HNSWParams
+from repro.core.metrics import get_metric, normalize_rows
+from repro.core.strategies import get_strategy
 from repro.core.update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
-                               VARIANTS, apply_update_batch_jit)
+                               apply_update_batch_jit)
 
 from .batcher import bucket_size, pow2_floor
 from .metrics import MetricsRegistry
@@ -71,10 +73,10 @@ class UpdateScheduler:
                  apply_fn: Callable | None = None):
         if max_ops_per_drain < 1:
             raise ValueError("max_ops_per_drain must be >= 1")
-        if variant not in VARIANTS:
-            # fail at construction, not minutes later at the first drain
-            raise ValueError(f"unknown variant {variant!r}; "
-                             f"options: {VARIANTS}")
+        # fail at construction, not minutes later at the first drain — one
+        # registry lookup is THE validation (uniform error message)
+        get_strategy(variant)
+        self._normalize = get_metric(params.space).normalize_ingest
         self.params = params
         self.dim = dim
         self.variant = variant
@@ -97,12 +99,15 @@ class UpdateScheduler:
         self.submit(UpdateOp("delete", int(label)))
 
     def replace(self, vector, label: int) -> None:
-        self.submit(UpdateOp("replace", int(label),
-                             np.asarray(vector, np.float32)))
+        self.submit(UpdateOp("replace", int(label), self._ingest(vector)))
 
     def insert(self, vector, label: int) -> None:
-        self.submit(UpdateOp("insert", int(label),
-                             np.asarray(vector, np.float32)))
+        self.submit(UpdateOp("insert", int(label), self._ingest(vector)))
+
+    def _ingest(self, vector) -> np.ndarray:
+        """Metric-aware ingest: cosine unit-normalises before the core."""
+        v = np.asarray(vector, np.float32)
+        return normalize_rows(v) if self._normalize else v
 
     @property
     def backlog(self) -> int:
@@ -183,3 +188,8 @@ class UpdateScheduler:
         self.metrics.histogram("rebuild_latency_ms").observe(
             (time.perf_counter() - t0) * 1e3)
         return backup
+
+
+from repro.core.strategies import variants_deprecation_shim as _shim
+
+__getattr__ = _shim(__name__)

@@ -1,0 +1,325 @@
+"""Public ``repro.api`` facade: metric spaces, filters, growth, persistence,
+registries, and mixed-op churn through one entry point."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import api
+from repro.data import brute_force_knn, clustered_vectors, exact_knn
+
+DIM = 16
+N = 2000
+K = 10
+EF = 64
+SPACES = ("l2", "ip", "cosine")
+
+
+def recall(lab, gt):
+    k = gt.shape[1]
+    return np.mean([len(set(lab[i]) & set(gt[i])) / k
+                    for i in range(gt.shape[0])])
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return (clustered_vectors(N, DIM, seed=3),
+            clustered_vectors(32, DIM, seed=4))
+
+
+@pytest.fixture(scope="module", params=SPACES)
+def space_index(request, corpus):
+    X, _ = corpus
+    vi = api.create(space=request.param, dim=DIM, capacity=N, M=8,
+                    ef_construction=64, strategy="mn_ru_gamma", ef_search=EF,
+                    num_layers=3)
+    vi.add_items(X)
+    return vi
+
+
+# -- brute-force parity across spaces ---------------------------------------
+
+def test_knn_query_matches_brute_force(space_index, corpus):
+    X, Q = corpus
+    lab, dists = space_index.knn_query(Q, k=K, ef=EF)
+    gt = exact_knn(X, Q, K, space_index.space)
+    assert lab.shape == dists.shape == (len(Q), K)
+    assert recall(lab, gt) >= 0.95
+    # distances come back ascending with no sentinel padding on a full index
+    assert np.all(np.diff(dists, axis=1) >= -1e-5)
+    assert np.all(lab >= 0)
+
+
+def test_filtered_query_matches_masked_brute_force(space_index, corpus):
+    X, Q = corpus
+    allowed = np.arange(0, N, 5)
+    lab, _ = space_index.knn_query(Q, k=K, ef=EF, filter=allowed)
+    assert np.isin(lab[lab >= 0], allowed).all()
+    gt = allowed[exact_knn(X[allowed], Q, K, space_index.space)]
+    assert recall(lab, gt) >= 0.9
+
+
+def test_filtered_query_callable_and_tiny_predicate(space_index):
+    X = np.asarray(space_index.index.vectors)
+    lab, _ = space_index.knn_query(X[123], k=3,
+                                   filter=lambda l: l % 2 == 1)
+    assert np.all((lab < 0) | (lab % 2 == 1))
+    # predicate narrower than k: the remnant pads with -1, never wrong labels
+    lab, dists = space_index.knn_query(X[123], k=5, filter=np.array([7, 11]))
+    got = set(int(v) for v in lab[0] if v >= 0)
+    assert got <= {7, 11} and len(got) >= 1
+    assert np.isinf(dists[0][lab[0] < 0]).all()
+
+
+# -- growth + compaction ----------------------------------------------------
+
+def test_add_items_grows_past_capacity_and_preserves_recall():
+    X = clustered_vectors(600, DIM, seed=11)
+    Q = clustered_vectors(24, DIM, seed=12)
+    vi = api.create(space="l2", dim=DIM, capacity=128, M=8,
+                    ef_construction=48, num_layers=3)
+    for lo in range(0, 600, 150):              # crosses 128 -> 256 -> 512 -> 1024
+        vi.add_items(X[lo:lo + 150], np.arange(lo, lo + 150))
+    assert vi.capacity == 1024 and vi.count == 600
+
+    fresh = api.create(space="l2", dim=DIM, capacity=600, M=8,
+                       ef_construction=48, num_layers=3)
+    fresh.add_items(X)
+
+    gt = brute_force_knn(X, Q, K)
+    grown = recall(vi.knn_query(Q, k=K, ef=EF)[0], gt)
+    ref = recall(fresh.knn_query(Q, k=K, ef=EF)[0], gt)
+    assert grown >= ref - 0.03
+    assert grown >= 0.9
+
+
+def test_compact_reclaims_deleted_slots():
+    X = clustered_vectors(300, DIM, seed=21)
+    vi = api.create(space="l2", dim=DIM, capacity=300, M=8,
+                    ef_construction=48, num_layers=3)
+    vi.add_items(X)
+    vi.mark_deleted(np.arange(0, 300, 3))
+    assert vi.deleted_count == 100
+    cap = vi.compact()
+    assert vi.deleted_count == 0 and vi.count == 200
+    assert cap == vi.capacity and cap & (cap - 1) == 0
+    live = np.setdiff1d(np.arange(300), np.arange(0, 300, 3))
+    lab, _ = vi.knn_query(X[live], k=1, ef=EF)
+    assert np.mean(lab[:, 0] == live) >= 0.95    # self-recall post-compact
+    # deleted labels are really gone
+    lab, _ = vi.knn_query(X[:10], k=5, ef=EF)
+    assert not np.isin(lab, np.arange(0, 300, 3)).any()
+
+
+def test_replace_items_overwrites_live_label():
+    X = clustered_vectors(40, 8, seed=61)
+    vi = api.create(space="l2", dim=8, capacity=64, M=4, num_layers=2,
+                    ef_construction=32)
+    vi.add_items(X[:30])
+    with pytest.raises(ValueError, match="replace_items"):
+        vi.add_items(X[30], [5])               # add_items refuses live labels
+    vi.replace_items(X[30], [5])               # ...but replace upserts them
+    assert vi.count == 30                      # no duplicate live label
+    lab, _ = vi.knn_query(X[30], k=1, ef=48)
+    assert lab[0, 0] == 5                      # new vector owns the label
+    vi.mark_deleted(5)                         # and deleting it really works
+    lab, _ = vi.knn_query(X[30], k=30, ef=64)
+    assert 5 not in set(lab[0].tolist()) and vi.count == 29
+    # overwriting a pending-deletion label is also safe
+    vi.replace_items(X[31], [5])
+    assert vi.count == 30
+    lab, _ = vi.knn_query(X[31], k=1, ef=48)
+    assert lab[0, 0] == 5
+
+
+def test_failed_add_does_not_corrupt_label_counter():
+    X = clustered_vectors(4, 8, seed=62)
+    vi = api.create(space="l2", dim=8, capacity=16, M=4, num_layers=2,
+                    ef_construction=32)
+    vi.add_items(X[:2])                        # auto labels 0, 1
+    with pytest.raises(ValueError, match="already present"):
+        vi.add_items(X[2:], [1, 5])            # clash on 1 — must be a no-op
+    assert vi.count == 2
+    assert vi.add_items(X[2]).tolist() == [2]  # counter was not advanced to 6
+
+
+# -- persistence ------------------------------------------------------------
+
+def test_save_load_roundtrip(tmp_path):
+    X = clustered_vectors(250, DIM, seed=31)
+    Q = clustered_vectors(8, DIM, seed=32)
+    vi = api.create(space="cosine", dim=DIM, capacity=250, M=8,
+                    ef_construction=48, strategy="mn_thn_ru", num_layers=3)
+    vi.add_items(X)
+    vi.mark_deleted([3, 5])
+    path = str(tmp_path / "index.npz")
+    vi.save(path)
+
+    vi2 = api.VectorIndex.load(path)
+    assert (vi2.space, vi2.strategy) == ("cosine", "mn_thn_ru")
+    assert vi2.count == vi.count and vi2.capacity == vi.capacity
+    lab1, d1 = vi.knn_query(Q, k=K, ef=EF)
+    lab2, d2 = vi2.knn_query(Q, k=K, ef=EF)
+    np.testing.assert_array_equal(lab1, lab2)
+    np.testing.assert_allclose(d1, d2, rtol=1e-6)
+    # the loaded index keeps mutating correctly (auto labels don't collide)
+    new = vi2.add_items(clustered_vectors(4, DIM, seed=33))
+    assert new.min() >= 250
+    lab, _ = vi2.knn_query(np.asarray(vi2.index.vectors)[
+        np.isin(np.asarray(vi2.index.labels), new)], k=1, ef=EF)
+    assert set(lab[:, 0]) <= set(new.tolist()) | {-1}
+
+
+# -- registries -------------------------------------------------------------
+
+def test_unknown_strategy_uniform_error_everywhere():
+    import re
+    from repro.core import HNSWParams, empty_index, replaced_update
+    from repro.core.update import apply_update_batch
+    from repro.serving import UpdateScheduler
+
+    msgs = []
+    with pytest.raises(ValueError, match="registered strategies") as e1:
+        api.create(space="l2", dim=4, strategy="nope")
+    msgs.append(str(e1.value))
+    p = HNSWParams(num_layers=2)
+    ix = empty_index(p, 8, 4)
+    with pytest.raises(ValueError, match="registered strategies") as e2:
+        replaced_update(p, ix, jnp.zeros(4), 0, variant="nope")
+    msgs.append(str(e2.value))
+    with pytest.raises(ValueError, match="registered strategies") as e3:
+        apply_update_batch(p, ix, jnp.zeros(1, jnp.int32),
+                           jnp.zeros(1, jnp.int32), jnp.zeros((1, 4)),
+                           variant="nope")
+    msgs.append(str(e3.value))
+    with pytest.raises(ValueError, match="registered strategies") as e4:
+        UpdateScheduler(p, 4, variant="nope")
+    msgs.append(str(e4.value))
+    assert len(set(msgs)) == 1            # ONE uniform message, not three copies
+    for name in api.list_strategies():
+        assert name in msgs[0]
+
+
+def test_unknown_space_error_lists_registered():
+    with pytest.raises(ValueError, match="registered spaces"):
+        api.create(space="hamming", dim=4)
+    assert set(SPACES) <= set(api.list_metrics())
+
+
+def test_register_custom_strategy_via_facade():
+    from repro.core.strategies import UpdateStrategy, register_strategy
+    name = "test_custom_ru"
+    if name not in api.list_strategies():
+        register_strategy(UpdateStrategy(name, "mutual", "per_vertex", 1.05))
+    assert name in api.list_strategies()
+
+    X = clustered_vectors(64, 8, seed=41)
+    vi = api.create(space="l2", dim=8, capacity=64, M=4, num_layers=2,
+                    ef_construction=32, strategy=name)
+    vi.add_items(X)
+    vi.mark_deleted(np.arange(8))
+    newl = vi.replace_items(clustered_vectors(8, 8, seed=42),
+                            np.arange(100, 108))
+    assert vi.count == 64 and vi.deleted_count == 0
+    lab, _ = vi.knn_query(np.asarray(vi.index.vectors)[
+        np.isin(np.asarray(vi.index.labels), newl)], k=1, ef=48)
+    assert np.isin(lab[:, 0], newl).mean() >= 0.9
+
+
+def test_custom_repair_fn_is_invoked():
+    from repro.core.strategies import UpdateStrategy, register_strategy
+    calls = []
+
+    def no_repair(params, nbrs, vectors, deleted, pid, layer, strategy):
+        calls.append(layer)          # trace-time side effect
+        return nbrs
+
+    name = "test_no_repair_ru"
+    if name not in api.list_strategies():
+        register_strategy(UpdateStrategy(name, repair_fn=no_repair))
+    vi = api.create(space="l2", dim=8, capacity=32, M=4, num_layers=2,
+                    ef_construction=32, strategy=name)
+    vi.add_items(clustered_vectors(20, 8, seed=43))
+    vi.mark_deleted([0])
+    vi.replace_items(clustered_vectors(1, 8, seed=44), [777])
+    assert calls                     # the override actually ran at trace time
+    assert vi.count == 20
+
+
+def test_invalid_strategy_config_rejected():
+    from repro.core.strategies import UpdateStrategy
+    with pytest.raises(ValueError, match="repair_set"):
+        UpdateStrategy("bad", repair_set="psychic")
+    with pytest.raises(ValueError, match="candidate_pool"):
+        UpdateStrategy("bad", candidate_pool="psychic")
+
+
+# -- legacy surface ---------------------------------------------------------
+
+def test_deprecated_names_still_import_with_warning():
+    import repro.core
+    import repro.serving
+    with pytest.warns(DeprecationWarning, match="list_strategies"):
+        variants = repro.core.VARIANTS
+    assert set(variants) <= set(api.list_strategies())
+    with pytest.warns(DeprecationWarning):
+        assert repro.serving.VARIANTS == variants
+    import repro.serving.update_queue as uq
+    with pytest.warns(DeprecationWarning):
+        assert uq.VARIANTS == variants
+
+
+def test_pre_redesign_free_functions_still_work(corpus):
+    # the functional core remains importable and agrees with the facade
+    from repro.core import HNSWParams, batch_knn, build
+    X, Q = corpus
+    p = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=64,
+                   ef_search=EF)
+    ix = build(p, jnp.asarray(X[:400]))
+    lab, _, _ = batch_knn(p, ix, jnp.asarray(Q), K, EF)
+    gt = brute_force_knn(X[:400], Q, K)
+    assert recall(np.asarray(lab), gt) >= 0.95
+
+
+# -- mixed-op churn property -------------------------------------------------
+
+def test_mixed_ops_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    pool = clustered_vectors(256, 8, seed=51)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["add", "delete", "replace"]),
+                              st.integers(0, 255)),
+                    min_size=1, max_size=24))
+    def run(ops):
+        vi = api.create(space="l2", dim=8, capacity=32, M=4, num_layers=2,
+                        ef_construction=32)
+        live: dict[int, int] = {}      # label -> pool row
+        next_label = 0
+        for kind, row in ops:
+            if kind in ("add", "replace") and row in live.values():
+                continue               # identical vectors make k=1 ambiguous
+            if kind == "add":
+                vi.add_items(pool[row], [next_label])
+                live[next_label] = row
+                next_label += 1
+            elif kind == "delete" and live:
+                victim = sorted(live)[row % len(live)]
+                vi.mark_deleted(victim)
+                del live[victim]
+            elif kind == "replace" and next_label > 0:
+                vi.replace_items(pool[row], [next_label])
+                live[next_label] = row
+                next_label += 1
+        assert vi.count == len(live)
+        if live:
+            labels = np.fromiter(live.keys(), dtype=np.int64)
+            rows = pool[[live[int(l)] for l in labels]]
+            lab, _ = vi.knn_query(rows, k=1, ef=48)
+            # every live point retrieves itself; deleted labels never appear
+            assert np.mean(lab[:, 0] == labels) >= 0.9
+            dead = np.setdiff1d(np.arange(next_label), labels)
+            assert not np.isin(lab, dead).any()
+
+    run()

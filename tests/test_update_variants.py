@@ -3,7 +3,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (VARIANTS, batch_knn, count_unreachable,
+from repro.core.strategies import BUILTIN_STRATEGIES as VARIANTS
+from repro.core import (batch_knn, count_unreachable,
                         delete_and_update_batch, mark_delete_jit, num_deleted,
                         replaced_update_jit, slot_of_label)
 from repro.data import clustered_vectors
