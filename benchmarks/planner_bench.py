@@ -1,0 +1,151 @@
+"""Query-planner crossover sweep: graph beam search vs exact Pallas scan.
+
+Maps the frontier the execution planner (``repro.core.planner``) routes on:
+for each (index size x deleted-fraction x filter-selectivity) cell, time a
+k-NN batch on the forced graph tier (``mode="graph"``) and the forced exact
+tier (``mode="exact"``) through the same ``VectorIndex.knn_query`` facade
+path, and measure recall@k against numpy brute force over the live
+(and filter-allowed) set. The exact tier is recall-1.0 by construction, so
+the interesting output is WHERE it is also faster — the churn-heavy /
+filter-starved regimes the paper targets. Results (including the crossover
+cells) go to ``experiments/results/planner_bench.json`` and are summarised
+in docs/QUERY_PLANNER.md.
+
+  PYTHONPATH=src python benchmarks/planner_bench.py
+  PYTHONPATH=src python benchmarks/planner_bench.py --dry-run   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro import api
+from repro.data import clustered_vectors, exact_knn
+
+from common import SCALE, save_result
+
+K = 10
+N_QUERIES = 32
+
+
+def measure_mode(vindex, Q, mode, filter_labels, reps):
+    """Best-of-reps wall seconds for one knn_query batch (post warm-up)."""
+    kw = {"k": K, "mode": mode}
+    if filter_labels is not None:
+        kw["filter"] = filter_labels
+    vindex.knn_query(Q, **kw)                      # compile + warm caches
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        labels, _ = vindex.knn_query(Q, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best, labels
+
+
+def recall(lab, gt):
+    return float(np.mean([len(set(lab[i]) & set(gt[i])) / K
+                          for i in range(lab.shape[0])]))
+
+
+def sweep_cell(vindex, X, live_labels, Q, selectivity, reps):
+    """One (state x selectivity) cell: graph vs exact timing + recall."""
+    if selectivity >= 1.0:
+        filt = None
+        allowed = live_labels
+    else:
+        n_allow = max(int(len(live_labels) * selectivity), K)
+        allowed = np.sort(np.random.default_rng(7).choice(
+            live_labels, size=n_allow, replace=False))
+        filt = allowed
+    rows = X[allowed]                      # labels ARE row ids in this bench
+    gt = allowed[exact_knn(rows, Q, K, vindex.space)]
+
+    t_graph, lab_g = measure_mode(vindex, Q, "graph", filt, reps)
+    t_exact, lab_e = measure_mode(vindex, Q, "exact", filt, reps)
+    return {
+        "graph_ms": t_graph * 1e3,
+        "exact_ms": t_exact * 1e3,
+        "speedup_exact": t_graph / max(t_exact, 1e-12),
+        "recall_graph": recall(lab_g, gt),
+        "recall_exact": recall(lab_e, gt),
+        "planned_tier": vindex.plan(filter=filt).tier,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny corpus, one rep, no results file")
+    ap.add_argument("--reps", type=int, default=0,
+                    help="timing reps per cell (0 = auto)")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        sizes = [256]
+        deleted_fracs = [0.0, 0.6]
+        selectivities = [1.0, 0.04]
+        reps = args.reps or 1
+    else:
+        sizes = [int(1024 * SCALE), int(4096 * SCALE)]
+        deleted_fracs = [0.0, 0.5, 0.9]
+        selectivities = [1.0, 0.2, 0.04]
+        reps = args.reps or 3
+
+    dim = 64
+    Q = clustered_vectors(N_QUERIES, dim, seed=1)
+    cells = []
+    print(f"{'n':>6} {'del%':>5} {'sel':>5} {'graph ms':>9} {'exact ms':>9} "
+          f"{'x':>6} {'rec g':>6} {'rec e':>6} {'auto':>6}")
+    for n in sizes:
+        X = clustered_vectors(n, dim, seed=0)
+        vindex = api.create(space="l2", dim=dim, capacity=n, M=8,
+                            ef_construction=64, ef_search=64)
+        vindex.add_items(X)
+        deleted = np.zeros(0, np.int64)
+        rng = np.random.default_rng(3)
+        for frac in sorted(deleted_fracs):
+            # delete incrementally up to the target fraction
+            target = int(n * frac)
+            if target > len(deleted):
+                remaining = np.setdiff1d(np.arange(n), deleted)
+                extra = rng.choice(remaining, size=target - len(deleted),
+                                   replace=False)
+                vindex.mark_deleted(extra.astype(np.int32))
+                deleted = np.concatenate([deleted, extra])
+            live_labels = np.setdiff1d(np.arange(n), deleted)
+            for sel in selectivities:
+                stats = sweep_cell(vindex, X, live_labels, Q, sel, reps)
+                cells.append({"n": n, "deleted_frac": frac,
+                              "selectivity": sel, **stats})
+                c = cells[-1]
+                print(f"{n:>6} {frac:>5.2f} {sel:>5.2f} "
+                      f"{c['graph_ms']:>9.1f} {c['exact_ms']:>9.1f} "
+                      f"{c['speedup_exact']:>6.2f} "
+                      f"{c['recall_graph']:>6.3f} {c['recall_exact']:>6.3f} "
+                      f"{c['planned_tier']:>6}", flush=True)
+
+    crossover = [c for c in cells if c["exact_ms"] < c["graph_ms"]]
+    churn_heavy_wins = [c for c in crossover
+                        if c["deleted_frac"] >= 0.5 or c["selectivity"] <= 0.05]
+    print(f"\nexact tier faster in {len(crossover)}/{len(cells)} cells "
+          f"({len(churn_heavy_wins)} churn-heavy)")
+    assert all(c["recall_exact"] >= 1.0 - 1e-9 for c in cells), \
+        "exact tier must be recall-perfect"
+
+    if args.dry_run:
+        print("dry run: skipping results file")
+        return
+    save_result("planner_bench", {
+        "k": K, "dim": dim, "n_queries": N_QUERIES, "reps": reps,
+        "backend_note": "CPU container: Pallas kernels run in interpret "
+                        "mode; re-run on TPU for hardware numbers",
+        "cells": cells,
+        "crossover_cells": crossover,
+    })
+    print("saved -> experiments/results/planner_bench.json")
+
+
+if __name__ == "__main__":
+    main()

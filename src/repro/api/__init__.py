@@ -15,6 +15,9 @@ against.
 """
 from repro.core.metrics import (Metric, get_metric, list_metrics,
                                 register_metric)
+from repro.core.planner import (DEFAULT_PLANNER, MODES, IndexStats,
+                                PlanDecision, PlannerConfig, choose_tier,
+                                index_stats)
 from repro.core.strategies import (UpdateStrategy, get_strategy,
                                    list_strategies, register_strategy)
 
@@ -24,4 +27,6 @@ __all__ = [
     "VectorIndex", "create",
     "Metric", "get_metric", "list_metrics", "register_metric",
     "UpdateStrategy", "get_strategy", "list_strategies", "register_strategy",
+    "DEFAULT_PLANNER", "MODES", "IndexStats", "PlanDecision",
+    "PlannerConfig", "choose_tier", "index_stats",
 ]

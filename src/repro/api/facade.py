@@ -9,7 +9,8 @@ capacity growth, and the serving engine all sit behind it:
 
     vi = api.create(space="cosine", dim=64, capacity=1000)
     vi.add_items(X, labels)                       # grows past capacity
-    labels, dists = vi.knn_query(Q, k=10, ef=64)
+    labels, dists = vi.knn_query(Q, k=10, ef=64)  # planner-routed (auto)
+    labels, dists = vi.knn_query(Q, k=10, mode="exact")   # Pallas scan tier
     labels, dists = vi.knn_query(Q, k=10, filter=allowed_labels)
     vi.mark_deleted(stale_labels)
     vi.replace_items(fresh_X, fresh_labels)       # paper Alg. 2+3 repair
@@ -44,7 +45,8 @@ from repro.core.hnsw import build as _build
 from repro.core.index import (HNSWIndex, HNSWParams, empty_index,
                               resize_index)
 from repro.core.metrics import get_metric, normalize_rows
-from repro.core.search import batch_knn
+from repro.core.planner import (DEFAULT_PLANNER, PlanDecision, PlannerConfig,
+                                choose_tier, index_stats, plan_and_search)
 from repro.core.strategies import get_strategy
 from repro.core.update import (OP_DELETE, OP_INSERT, OP_REPLACE, OP_NOP,
                                apply_update_batch_jit, num_deleted)
@@ -70,6 +72,7 @@ class VectorIndex:
                  ef_construction: int = 64, ef_search: int = 32,
                  alpha: float = 1.0, strategy: str = "mn_ru_gamma",
                  seed: int = 0, dtype=jnp.float32,
+                 planner: PlannerConfig | None = None,
                  _index: HNSWIndex | None = None,
                  _next_label: int = 0):
         if dim <= 0:
@@ -77,6 +80,7 @@ class VectorIndex:
         self.metric = get_metric(space)          # validates the space
         get_strategy(strategy)                   # fail-fast, uniform error
         self.strategy = strategy
+        self.planner = planner if planner is not None else DEFAULT_PLANNER
         self.params = HNSWParams(
             M=M, M0=M0 if M0 is not None else 2 * M, num_layers=num_layers,
             ef_construction=ef_construction, ef_search=ef_search,
@@ -301,16 +305,27 @@ class VectorIndex:
         return allow
 
     def knn_query(self, Q, k: int = 10, ef: int | None = None,
-                  filter=None) -> tuple[np.ndarray, np.ndarray]:
+                  filter=None, mode: str = "auto"
+                  ) -> tuple[np.ndarray, np.ndarray]:
         """Batched k-NN: ``Q[b, d] -> (labels[b, k], dists[b, k])``.
 
+        ``mode`` picks the execution tier (see docs/QUERY_PLANNER.md):
+        ``"auto"`` (default) lets the planner route the batch — HNSW beam
+        search normally, the exact Pallas scan tier when the index is
+        small, churn-heavy (high mark-deleted fraction), or the filter is
+        very selective; ``"graph"`` / ``"exact"`` force a tier.
+        ``mode="exact"`` is recall-exact by construction (numpy brute-force
+        parity) at linear cost in capacity.
+
         ``filter`` restricts results to a label predicate — an array of
-        allowed labels or a ``label -> bool`` callable — evaluated INSIDE
-        the beam search (disallowed points are traversed for connectivity
-        but never occupy result slots), so predicate recall doesn't decay
-        the way post-filtering k results would. Distances are in the
-        index's metric (squared L2 for ``l2``, ``1 - <q, x>`` for
-        ``ip``/``cosine``); missing results pad with label -1 / dist inf.
+        allowed labels or a ``label -> bool`` callable. On the graph tier
+        it is evaluated INSIDE the beam search (disallowed points are
+        traversed for connectivity but never occupy result slots), so
+        predicate recall doesn't decay the way post-filtering k results
+        would; on the exact tier it masks slots inside the streaming top-k
+        reduction. Distances are in the index's metric (squared L2 for
+        ``l2``, ``1 - <q, x>`` for ``ip``/``cosine``); missing results pad
+        with label -1 / dist inf.
         """
         Q = self._prep_vectors(Q)
         ef = max(ef if ef is not None else self.params.ef_search, k)
@@ -320,14 +335,25 @@ class VectorIndex:
             # selective predicates thin the result beam — widen ef by the
             # inverse selectivity (pow2, capped at 4x so the compiled-
             # program count stays bounded); highly selective filters should
-            # still pass a larger ef explicitly
+            # still pass a larger ef explicitly (or let the planner route
+            # them to the exact tier, which needs no boost)
             n_allowed = max(int(np.asarray(mask).sum()), 1)
             boost = _pow2_at_least(-(-self.capacity // n_allowed))
             ef = min(ef * min(boost, 4), _pow2_at_least(self.capacity))
             allow = jnp.asarray(mask)
-        labels, _, dists = batch_knn(self.params, self._index,
-                                     jnp.asarray(Q), k, ef, allow)
+        labels, _, dists, _ = plan_and_search(
+            self.params, self._index, jnp.asarray(Q), k, ef, allow,
+            mode=mode, config=self.planner)
         return np.asarray(labels), np.asarray(dists)
+
+    def plan(self, filter=None) -> PlanDecision:
+        """Explain what ``knn_query(mode="auto")`` would do right now:
+        returns the :class:`~repro.core.planner.PlanDecision` (tier, the
+        triggering heuristic, and the index statistics it saw)."""
+        allow = None
+        if filter is not None:
+            allow = jnp.asarray(self._filter_to_slot_mask(filter))
+        return choose_tier(index_stats(self._index, allow), self.planner)
 
     # -- persistence --------------------------------------------------------
 
@@ -381,11 +407,14 @@ class VectorIndex:
         The engine takes over: it owns an (immutable-snapshot) copy of the
         state and drains its own update queue; subsequent facade mutations
         do NOT flow into a live engine. The engine inherits this index's
-        metric space (queries/updates are normalised for ``cosine``) and
-        update strategy unless overridden via ``variant=``.
+        metric space (queries/updates are normalised for ``cosine``),
+        update strategy unless overridden via ``variant=``, and query
+        planner config unless overridden via ``planner=`` (``mode=`` pins
+        an execution tier for all served buckets).
         """
         from repro.serving import ServingEngine
         engine_kwargs.setdefault("variant", self.strategy)
+        engine_kwargs.setdefault("planner", self.planner)
         return ServingEngine(self.params, self._index, **engine_kwargs)
 
 

@@ -20,6 +20,9 @@ from .update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
                      first_free_slot, mark_delete, mark_delete_jit,
                      num_deleted, replaced_update, replaced_update_jit,
                      slot_of_label)
+from .planner import (DEFAULT_PLANNER, MODES, IndexStats, PlanDecision,
+                      PlannerConfig, choose_tier, exact_scan, index_stats,
+                      plan_and_search)
 from .reach import (bfs_reachable, bfs_unreachable, count_unreachable,
                     indegree, indegree_unreachable)
 from .backup import (DualIndexManager, batch_dual_search, dual_search,
@@ -37,6 +40,10 @@ __all__ = [
     "build", "insert", "insert_jit",
     # search
     "batch_knn", "greedy_layer", "knn_search", "search_layer",
+    # query execution planner (graph vs exact Pallas scan tier)
+    "DEFAULT_PLANNER", "MODES", "IndexStats", "PlanDecision",
+    "PlannerConfig", "choose_tier", "exact_scan", "index_stats",
+    "plan_and_search",
     # updates (op tape + replaced_update family)
     "OP_DELETE", "OP_INSERT", "OP_NOP", "OP_REPLACE",
     "apply_update_batch", "apply_update_batch_jit",

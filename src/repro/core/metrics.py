@@ -70,11 +70,19 @@ class Metric:
     shape-static, and order results ascending-is-closer with ``INF`` as the
     invalid sentinel. ``normalize_ingest`` tells the facade / serving layer
     to unit-normalise vectors and queries before they reach the core.
+
+    ``kernel_form`` names the Pallas distance form the accelerated exact
+    scan tier (:mod:`repro.kernels`) implements for this space — ``"l2"``
+    (squared L2) or ``"ip"`` (``1 - <q, x>``; cosine maps here because
+    ingest normalisation already happened). ``None`` means no Pallas kernel
+    exists for the space, and the exact tier falls back to the pure-jnp
+    ``pairwise_fn`` path (still exact, just not hand-tiled).
     """
     name: str
     point_fn: Callable[[jax.Array, jax.Array], jax.Array]
     pairwise_fn: Callable[[jax.Array, jax.Array], jax.Array]
     normalize_ingest: bool = False
+    kernel_form: str | None = None
 
 
 _METRICS: dict[str, Metric] = {}
@@ -120,7 +128,14 @@ def normalize_rows(X, eps: float = 1e-12):
         else X / (norms + eps)
 
 
-register_metric(Metric("l2", sqdist_point, sqdist_pairwise))
-register_metric(Metric("ip", ipdist_point, ipdist_pairwise))
+def kernel_form(space: str) -> str | None:
+    """The Pallas kernel form for ``space`` (``"l2"`` / ``"ip"`` / ``None``)."""
+    return get_metric(space).kernel_form
+
+
+register_metric(Metric("l2", sqdist_point, sqdist_pairwise,
+                       kernel_form="l2"))
+register_metric(Metric("ip", ipdist_point, ipdist_pairwise,
+                       kernel_form="ip"))
 register_metric(Metric("cosine", ipdist_point, ipdist_pairwise,
-                       normalize_ingest=True))
+                       normalize_ingest=True, kernel_form="ip"))

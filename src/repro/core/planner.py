@@ -1,0 +1,202 @@
+"""Query execution planner: route each kNN batch to the right tier.
+
+Two execution tiers serve a ``knn_query`` batch:
+
+  * **graph** — the HNSW beam search (:func:`~repro.core.search.batch_knn`):
+    sublinear in N, but its expansions are wasted on mark-deleted points
+    under heavy churn, and a very selective filter starves the result beam
+    (most expanded points are disallowed);
+  * **exact**  — a brute-force blocked scan over the slot array built on the
+    streaming :func:`repro.kernels.topk_dist` Pallas kernel: linear in N
+    but perfectly parallel MXU work, recall-exact by construction, and the
+    deleted/allow mask costs nothing extra (it rides inside the running
+    top-k reduction).
+
+"How Should We Evaluate Data Deletion in Graph-Based ANN Indexes?"
+(PAPERS.md) observes that under mark-delete churn a graph walk spends most
+of its expansions on dead nodes — exactly the regime where the exact scan
+is both faster and recall-perfect. FreshDiskANN routes work across tiers
+the same way (fresh scan + LTI graph). The planner makes that decision per
+batch from three cheap index statistics:
+
+  * ``live <= config.small_live``        — tiny index: the scan's one matmul
+    beats the walk's sequential hops outright;
+  * ``deleted_frac >= config.deleted_frac`` — churn-heavy: most beam
+    expansions land on mark-deleted slots;
+  * ``selectivity <= config.selectivity``   — filter so selective the beam
+    would starve (and the facade's ef boost saturates).
+
+Everything here is host-side plus a fixed handful of O(N) device
+reductions per decision (cached per epoch in the serving batcher); the
+chosen tier then runs one jitted program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import INF, INVALID
+from .index import HNSWIndex, HNSWParams
+from .metrics import dist_pairwise, get_metric
+from .search import batch_knn
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    """Tier-selection thresholds (documented in docs/QUERY_PLANNER.md).
+
+    Defaults come from the crossover frontier measured by
+    ``benchmarks/planner_bench.py`` on this container; re-run the sweep and
+    adjust when the hardware (or ef regime) changes.
+    """
+    small_live: int = 2048        # live count at/below which exact scan wins
+    deleted_frac: float = 0.5     # mark-deleted fraction at/above which the
+                                  # beam wastes most expansions on dead slots
+    selectivity: float = 0.05     # allowed/live fraction at/below which a
+                                  # filtered beam starves
+
+
+DEFAULT_PLANNER = PlannerConfig()
+
+#: the valid ``mode=`` values everywhere a tier can be requested (facade,
+#: batcher, engine, launch flag)
+MODES = ("auto", "graph", "exact")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexStats:
+    """Cheap per-snapshot statistics the planner decides from."""
+    capacity: int                 # slot-array length N
+    allocated: int                # slots with levels >= 0 (live + deleted)
+    live: int                     # allocated and not mark-deleted
+    allowed: int | None = None    # live slots passing the filter (None = no
+                                  # filter)
+
+    @property
+    def deleted_frac(self) -> float:
+        """Mark-deleted fraction of allocated slots (0 when empty)."""
+        return (self.allocated - self.live) / max(self.allocated, 1)
+
+    @property
+    def selectivity(self) -> float:
+        """Fraction of live slots the filter allows (1.0 when no filter)."""
+        if self.allowed is None:
+            return 1.0
+        return self.allowed / max(self.live, 1)
+
+
+def index_stats(index: HNSWIndex,
+                allow: jax.Array | None = None) -> IndexStats:
+    """Gather :class:`IndexStats` from an index (and optional allow mask).
+
+    Two or three O(N) device reductions + host syncs — cheap next to one
+    query batch, and the serving batcher caches the unfiltered stats per
+    epoch.
+    """
+    alloc = index.levels >= 0
+    live_mask = alloc & ~index.deleted
+    allocated = int(jnp.sum(alloc))
+    live = int(jnp.sum(live_mask))
+    allowed = None
+    if allow is not None:
+        allowed = int(jnp.sum(live_mask & allow))
+    return IndexStats(capacity=index.capacity, allocated=allocated,
+                      live=live, allowed=allowed)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """One routing decision: which tier and why."""
+    tier: str                     # "graph" | "exact"
+    reason: str                   # human-readable trigger
+    stats: IndexStats
+
+    def __str__(self) -> str:
+        return f"{self.tier} ({self.reason})"
+
+
+def choose_tier(stats: IndexStats,
+                config: PlannerConfig = DEFAULT_PLANNER) -> PlanDecision:
+    """Pick the execution tier for one batch from index statistics."""
+    if stats.live <= config.small_live:
+        return PlanDecision("exact", f"live {stats.live} <= small_live "
+                                     f"{config.small_live}", stats)
+    if stats.deleted_frac >= config.deleted_frac:
+        return PlanDecision("exact", f"deleted_frac {stats.deleted_frac:.2f}"
+                                     f" >= {config.deleted_frac}", stats)
+    if stats.selectivity <= config.selectivity:
+        return PlanDecision("exact", f"selectivity {stats.selectivity:.3f}"
+                                     f" <= {config.selectivity}", stats)
+    return PlanDecision("graph", "no exact-tier trigger", stats)
+
+
+@partial(jax.jit, static_argnames=("params", "k", "interpret"))
+def exact_scan(params: HNSWParams, index: HNSWIndex, Q: jax.Array, k: int,
+               allow: jax.Array | None = None,
+               interpret: bool | None = None):
+    """Exact blocked k-NN over the slot array (the planner's exact tier).
+
+    Same contract as :func:`~repro.core.search.batch_knn`:
+    ``Q[b, d] -> (labels[b, k], slot_ids[b, k], dists[b, k])`` sorted
+    ascending in the index's metric, padded with ``(-1, -1, inf)`` when
+    fewer than k slots are live (and allowed). Free slots, mark-deleted
+    points, and filter-disallowed points are excluded inside the streaming
+    top-k reduction — no post-filtering recall loss, by construction.
+
+    Spaces whose :class:`~repro.core.metrics.Metric` declares a
+    ``kernel_form`` run the Pallas :func:`~repro.kernels.topk_dist` kernel;
+    other registered spaces fall back to a dense ``pairwise_fn`` +
+    ``lax.top_k`` program — still exact, just not hand-tiled.
+    """
+    # local import so loading the core package never imports the kernels
+    # layer (the dependency still points downward: core -> kernels)
+    from repro.kernels import topk_dist
+
+    eligible = (index.levels >= 0) & ~index.deleted
+    if allow is not None:
+        eligible = eligible & allow
+
+    form = get_metric(params.space).kernel_form
+    if form is not None:
+        dists, ids = topk_dist(Q, index.vectors, k, metric=form,
+                               mask=eligible, interpret=interpret)
+    else:
+        D = dist_pairwise(params.space, Q, index.vectors)
+        D = jnp.where(eligible[None, :], D, INF)
+        neg, ids = jax.lax.top_k(-D, k)
+        dists = -neg
+        ids = jnp.where(jnp.isinf(dists), INVALID, ids.astype(jnp.int32))
+
+    labels = jnp.where(ids >= 0, index.labels[jnp.clip(ids, 0)], INVALID)
+    return labels, ids, dists
+
+
+def plan_and_search(params: HNSWParams, index: HNSWIndex, Q: jax.Array,
+                    k: int, ef: int | None = None,
+                    allow: jax.Array | None = None, mode: str = "auto",
+                    config: PlannerConfig = DEFAULT_PLANNER,
+                    stats: IndexStats | None = None):
+    """Route one query batch: returns ``(labels, ids, dists, decision)``.
+
+    ``mode`` is the escape hatch: ``"auto"`` consults :func:`choose_tier`,
+    ``"graph"`` / ``"exact"`` force a tier. ``stats`` lets callers reuse a
+    cached :class:`IndexStats` (the serving batcher caches per epoch).
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown query mode {mode!r}; expected one "
+                         f"of {MODES}")
+    if mode == "auto":
+        decision = choose_tier(stats if stats is not None
+                               else index_stats(index, allow), config)
+    else:
+        s = stats if stats is not None else IndexStats(
+            index.capacity, allocated=-1, live=-1)
+        decision = PlanDecision(mode, f"forced by mode={mode!r}", s)
+    if decision.tier == "exact":
+        labels, ids, dists = exact_scan(params, index, Q, k, allow)
+    else:
+        labels, ids, dists = batch_knn(params, index, Q, k, ef, allow)
+    return labels, ids, dists, decision

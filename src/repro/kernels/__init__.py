@@ -1,14 +1,22 @@
 """Pallas TPU kernels for the ANN hot paths.
 
-  l2dist    — tiled pairwise squared-L2 distance matrix (MXU matmul form)
+  l2dist    — tiled pairwise distance matrix (MXU matmul form), metric-
+              parameterized: ``metric="l2"`` squared L2 (historical name) or
+              ``metric="ip"`` inner-product distance ``1 - <x, y>`` (the
+              registry's ``ip``/``cosine`` form)
   topk_dist — streaming fused distance + running top-k (never materialises
-              the full [Q, N] matrix; FlashAttention-style online reduction)
+              the full [Q, N] matrix; FlashAttention-style online
+              reduction), same ``metric`` forms plus an eligibility
+              ``mask[N]`` so deleted / filter-disallowed candidates are
+              excluded inside the running reduction — this is the exact
+              scan tier behind ``knn_query(mode="exact")``
   embed_bag — EmbeddingBag gather+segment-sum via one-hot MXU matmul tiles
 
 Each package ships ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py``
-(jit wrapper, padding, backend dispatch) and ``ref.py`` (pure-jnp oracle).
-On this CPU container kernels run with ``interpret=True``; on TPU the same
-BlockSpecs give hardware-aligned VMEM tiling.
+(jit wrapper, padding, backend dispatch) and ``ref.py`` (pure-jnp oracle,
+metric-parameterized to mirror the kernel forms). On this CPU container
+kernels run with ``interpret=True``; on TPU the same BlockSpecs give
+hardware-aligned VMEM tiling.
 """
 from .l2dist.ops import l2dist
 from .topk_dist.ops import topk_dist

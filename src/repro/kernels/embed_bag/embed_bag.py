@@ -44,7 +44,18 @@ def _embed_bag_kernel(idx_ref, tab_ref, o_ref, *, bv, L):
 @functools.partial(jax.jit, static_argnames=("bb", "bv", "interpret"))
 def embed_bag_pallas(table: jax.Array, indices: jax.Array, *, bb: int = 8,
                      bv: int = 512, interpret: bool = False) -> jax.Array:
-    """``table[V, D], indices[B, L] -> out[B, D]`` (sum of valid rows)."""
+    """``table[V, D], indices[B, L] -> out[B, D]`` (sum of valid rows).
+
+    Block-spec tiling: grid = (B/bb, V/bv) with the vocab axis innermost, so
+    the ``[bb, D]`` f32 accumulator block stays VMEM-resident across vocab
+    tiles; per step the kernel sees ``indices[bb, L]`` and ``table[bv, D]``.
+    Padding contract: B must divide ``bb`` and V must divide ``bv`` exactly
+    (the ``ops.embed_bag`` wrapper pads B with ``-1`` index rows — ignored
+    by the in-tile validity mask — and V with zero rows, then slices the
+    output back). Interpret-mode fallback: ``interpret=True`` (auto-selected
+    off-TPU by the wrapper) runs the same kernel through the Pallas
+    interpreter with identical numerics.
+    """
     V, D = table.shape
     B, L = indices.shape
     grid = (B // bb, V // bv)

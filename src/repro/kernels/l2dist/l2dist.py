@@ -1,15 +1,25 @@
-"""Tiled pairwise squared-L2 distance Pallas kernel.
+"""Tiled pairwise distance Pallas kernel (metric-parameterized).
 
 Grid = (Q/bq, N/bn, d/bd); the contraction axis d is the innermost grid
 dimension so the f32 accumulator tile in the output block stays resident in
 VMEM across k-steps (standard Pallas matmul accumulation pattern).
 
-Per k-step the partial contribution of a d-slice to ||x-y||^2 is
+Two statically-dispatched metric forms (one compiled program each):
 
-    sum_k (x_k^2) + sum_k (y_k^2) - 2 * X_tile @ Y_tile^T
+  * ``"l2"`` — per k-step the partial contribution of a d-slice to
+    ``||x-y||^2`` is ``sum_k (x_k^2) + sum_k (y_k^2) - 2 * X_tile @ Y_tile^T``,
+    which accumulates exactly over d-slices. The matmul term is MXU work
+    (bq x bd x bn, 128-aligned); the norm terms are VPU row reductions.
+  * ``"ip"`` — inner-product distance ``1 - X @ Y^T``: the accumulator is
+    initialised to 1 at the first k-step and each d-slice subtracts its
+    partial dot product (cosine distance when the caller ingest-normalised,
+    per the metric registry's ``cosine`` contract).
 
-which accumulates exactly over d-slices. The matmul term is MXU work
-(bq x bd x bn, 128-aligned); the norm terms are VPU row reductions.
+Padding contract: every dimension must divide its block exactly — the
+``ops.l2dist`` wrapper zero-pads Q/N/d and slices the output back (zero
+padding is exact for both forms: it contributes 0 to norms and dots).
+Interpret-mode fallback: ``interpret=True`` (auto-selected off-TPU by the
+wrapper) runs the same kernel through the Pallas interpreter.
 """
 from __future__ import annotations
 
@@ -19,30 +29,49 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_METRIC_FORMS = ("l2", "ip")
 
-def _l2dist_kernel(x_ref, y_ref, o_ref):
+
+def _dist_kernel(x_ref, y_ref, o_ref, *, metric):
     @pl.when(pl.program_id(2) == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] = (jnp.zeros_like(o_ref) if metric == "l2"
+                      else jnp.ones_like(o_ref))
 
     x = x_ref[...].astype(jnp.float32)          # [bq, bd]
     y = y_ref[...].astype(jnp.float32)          # [bn, bd]
-    xx = jnp.sum(x * x, axis=1, keepdims=True)  # [bq, 1]
-    yy = jnp.sum(y * y, axis=1, keepdims=True)  # [bn, 1]
     xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)  # [bq, bn]
-    o_ref[...] += xx + yy.T - 2.0 * xy
+    if metric == "l2":
+        xx = jnp.sum(x * x, axis=1, keepdims=True)  # [bq, 1]
+        yy = jnp.sum(y * y, axis=1, keepdims=True)  # [bn, 1]
+        o_ref[...] += xx + yy.T - 2.0 * xy
+    else:                                           # "ip": 1 - sum_k x.y
+        o_ref[...] -= xy
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bn", "bd", "interpret"))
-def l2dist_pallas(X: jax.Array, Y: jax.Array, *, bq: int = 128, bn: int = 128,
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "bd", "interpret",
+                                             "metric"))
+def l2dist_pallas(X: jax.Array, Y: jax.Array, *, metric: str = "l2",
+                  bq: int = 128, bn: int = 128,
                   bd: int = 128, interpret: bool = False) -> jax.Array:
-    """``[Q, d] x [N, d] -> [Q, N]`` squared L2. Dims must divide blocks."""
+    """``[Q, d] x [N, d] -> [Q, N]`` pairwise distance in ``metric`` form.
+
+    Block-spec tiling: grid (Q/bq, N/bn, d/bd), contraction axis innermost,
+    ``[bq, bn]`` f32 accumulator VMEM-resident across d-slices. Padding
+    contract: every dim must divide its block exactly — ``ops.l2dist``
+    zero-pads (exact for both forms) and slices back. ``interpret=True``
+    runs the same kernel through the Pallas interpreter (the off-TPU
+    fallback the wrapper auto-selects).
+    """
+    if metric not in _METRIC_FORMS:
+        raise ValueError(f"unsupported kernel metric form {metric!r}; "
+                         f"expected one of {_METRIC_FORMS}")
     Q, d = X.shape
     N, _ = Y.shape
     grid = (Q // bq, N // bn, d // bd)
     return pl.pallas_call(
-        _l2dist_kernel,
+        functools.partial(_dist_kernel, metric=metric),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, bd), lambda i, j, k: (i, k)),

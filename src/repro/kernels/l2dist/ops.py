@@ -21,18 +21,22 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bq", "bn", "bd", "interpret", "use_ref"))
-def l2dist(X: jax.Array, Y: jax.Array, *, bq: int = 128, bn: int = 128,
-           bd: int = 128, interpret: bool | None = None,
+                   static_argnames=("bq", "bn", "bd", "interpret", "use_ref",
+                                    "metric"))
+def l2dist(X: jax.Array, Y: jax.Array, *, metric: str = "l2", bq: int = 128,
+           bn: int = 128, bd: int = 128, interpret: bool | None = None,
            use_ref: bool = False) -> jax.Array:
-    """Pairwise squared L2 ``[Q, N]``; pads inputs to block multiples.
+    """Pairwise distance ``[Q, N]``; pads inputs to block multiples.
 
+    ``metric="l2"`` (squared L2, the historical name) or ``"ip"``
+    (``1 - <x, y>`` — the registry's ``ip``/``cosine`` form). Zero padding
+    is exact for both forms; the output is sliced back to ``[Q, N]``.
     ``interpret=None`` auto-selects interpret mode off-TPU. ``use_ref=True``
     routes to the jnp oracle (used inside pjit graphs where GSPMD should
     partition the matmul itself).
     """
     if use_ref:
-        return l2dist_ref(X, Y)
+        return l2dist_ref(X, Y, metric=metric)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     Q, d = X.shape
@@ -42,5 +46,6 @@ def l2dist(X: jax.Array, Y: jax.Array, *, bq: int = 128, bn: int = 128,
     bd_ = min(bd, d)
     Xp = _pad_to(_pad_to(X, 0, bq_), 1, bd_)
     Yp = _pad_to(_pad_to(Y, 0, bn_), 1, bd_)
-    out = l2dist_pallas(Xp, Yp, bq=bq_, bn=bn_, bd=bd_, interpret=interpret)
+    out = l2dist_pallas(Xp, Yp, metric=metric, bq=bq_, bn=bn_, bd=bd_,
+                        interpret=interpret)
     return out[:Q, :N]

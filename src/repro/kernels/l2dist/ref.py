@@ -1,12 +1,23 @@
-"""Pure-jnp oracle for the pairwise squared-L2 kernel."""
+"""Pure-jnp oracle for the pairwise distance kernel (metric-parameterized)."""
 import jax
 import jax.numpy as jnp
 
 
-def l2dist_ref(X: jax.Array, Y: jax.Array) -> jax.Array:
-    """``out[i, j] = ||X[i] - Y[j]||^2`` in f32, matmul form."""
+def l2dist_ref(X: jax.Array, Y: jax.Array, *,
+               metric: str = "l2") -> jax.Array:
+    """``out[i, j]`` pairwise distance in f32, matmul form.
+
+    ``metric="l2"`` gives ``||X[i] - Y[j]||^2``; ``metric="ip"`` gives
+    ``1 - <X[i], Y[j]>`` (the registry's ``ip``/``cosine`` form).
+    """
     X = X.astype(jnp.float32)
     Y = Y.astype(jnp.float32)
-    nx = jnp.sum(X * X, axis=-1, keepdims=True)
-    ny = jnp.sum(Y * Y, axis=-1, keepdims=True).T
-    return jnp.maximum(nx + ny - 2.0 * (X @ Y.T), 0.0)
+    xy = X @ Y.T
+    if metric == "l2":
+        nx = jnp.sum(X * X, axis=-1, keepdims=True)
+        ny = jnp.sum(Y * Y, axis=-1, keepdims=True).T
+        return jnp.maximum(nx + ny - 2.0 * xy, 0.0)
+    if metric == "ip":
+        return 1.0 - xy
+    raise ValueError(f"unsupported kernel metric form {metric!r}; "
+                     "expected 'l2' or 'ip'")

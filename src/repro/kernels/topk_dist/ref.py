@@ -1,14 +1,36 @@
-"""Pure-jnp oracle: full distance matrix + top-k (what the kernel avoids)."""
+"""Pure-jnp oracle: full distance matrix + top-k (what the kernel avoids).
+
+Mirrors the kernel's metric forms (``"l2"`` / ``"ip"``) and mask semantics:
+masked-out candidates score ``+inf`` and unfilled result slots return
+``(inf, -1)``, so the oracle and the streaming kernel agree bit-for-bit on
+which slots are "no result".
+"""
 import jax
 import jax.numpy as jnp
 
 
-def topk_dist_ref(Q: jax.Array, Y: jax.Array, k: int):
-    """Returns ``(dists[q, k], ids[q, k])`` of the k nearest rows of Y."""
+def topk_dist_ref(Q: jax.Array, Y: jax.Array, k: int, *, metric: str = "l2",
+                  mask: jax.Array | None = None):
+    """``(dists[q, k], ids[q, k])`` of the k nearest *unmasked* rows of Y.
+
+    ``mask`` is an optional bool/int ``[N]`` eligibility vector (nonzero =
+    candidate may appear in results).
+    """
     Qf = Q.astype(jnp.float32)
     Yf = Y.astype(jnp.float32)
-    nq = jnp.sum(Qf * Qf, axis=-1, keepdims=True)
-    ny = jnp.sum(Yf * Yf, axis=-1, keepdims=True).T
-    D = jnp.maximum(nq + ny - 2.0 * (Qf @ Yf.T), 0.0)
+    qy = Qf @ Yf.T
+    if metric == "l2":
+        nq = jnp.sum(Qf * Qf, axis=-1, keepdims=True)
+        ny = jnp.sum(Yf * Yf, axis=-1, keepdims=True).T
+        D = jnp.maximum(nq + ny - 2.0 * qy, 0.0)
+    elif metric == "ip":
+        D = 1.0 - qy
+    else:
+        raise ValueError(f"unsupported kernel metric form {metric!r}; "
+                         "expected 'l2' or 'ip'")
+    if mask is not None:
+        D = jnp.where(mask.reshape(1, -1) != 0, D, jnp.inf)
     neg, ids = jax.lax.top_k(-D, k)
-    return -neg, ids.astype(jnp.int32)
+    dists = -neg
+    ids = jnp.where(jnp.isinf(dists), -1, ids)
+    return dists, ids.astype(jnp.int32)

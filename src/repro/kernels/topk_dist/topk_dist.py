@@ -1,4 +1,4 @@
-"""Streaming fused distance + top-k Pallas kernel.
+"""Streaming fused distance + top-k Pallas kernel (metric-parameterized).
 
 The retrieval hot path (1 query batch x 10^6 candidates) must never
 materialise the full [Q, N] distance matrix (N=10^6 @ f32 = 4 MB *per query
@@ -6,10 +6,29 @@ row*). This kernel streams candidate tiles of Y through VMEM and maintains a
 running [bq, k] top-k buffer in the output block — the same online-reduction
 structure as FlashAttention's running softmax, applied to selection.
 
-Grid = (Q/bq, N/bn), candidate axis innermost so the output block (the
-running buffer) stays VMEM-resident across the sweep. The merge is k rounds
-of masked min-extraction over [bq, k+bn] — pure VPU elementwise/reduce ops
-(no gather, no sort), so it lowers cleanly to Mosaic.
+Distances dispatch statically on ``metric`` (one compiled program per form):
+
+  * ``"l2"`` — squared L2 via the matmul identity ||q||^2 + ||y||^2 - 2 q.y
+    (MXU contraction + VPU row norms);
+  * ``"ip"`` — inner-product distance ``1 - q.y`` (cosine distance when the
+    caller ingest-normalised, which is the registry's ``cosine`` contract).
+
+A per-candidate validity mask rides along as an ``i32[1, N]`` input (1 =
+candidate may appear in results). This is how the exact scan tier excludes
+free slots, mark-deleted points, and filter-disallowed points *inside* the
+running reduction: masked columns score ``+inf`` so they never displace a
+live candidate, and unfilled output slots keep the ``(inf, -1)`` sentinel.
+
+Grid/tiling: grid = (Q/bq, N/bn), candidate axis innermost so the output
+block (the running buffer) stays VMEM-resident across the sweep. Per step
+the kernel sees ``q[bq, d]``, ``y[bn, d]``, ``mask[1, bn]`` blocks. The
+top-k merge is k rounds of masked min-extraction over [bq, k+bn] — pure VPU
+elementwise/reduce ops (no gather, no sort), so it lowers cleanly to
+Mosaic. Padding contract: Q and N must divide their blocks exactly (the
+``ops.topk_dist`` wrapper pads and passes ``n_real``; padded candidate
+columns are masked by the global-id bound). Interpret-mode fallback: pass
+``interpret=True`` (the wrapper auto-selects it off-TPU) to run the same
+kernel through the Pallas interpreter — numerics identical, tiling ignored.
 """
 from __future__ import annotations
 
@@ -20,10 +39,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 _INF = float("inf")
+_METRIC_FORMS = ("l2", "ip")
 
 
 def _merge_topk(vals, ids, k):
-    """k rounds of masked min-extraction. vals/ids: [bq, C] -> ([bq,k],[bq,k])."""
+    """k rounds of masked min-extraction. vals/ids: [bq, C] -> ([bq,k],[bq,k]).
+
+    An extraction that only finds ``inf`` (fewer than k eligible candidates
+    so far) emits the ``(inf, -1)`` sentinel — never a real id — so masked
+    or already-extracted columns can't leak into unfilled output slots.
+    """
     out_v = []
     out_i = []
     for _ in range(k):
@@ -31,13 +56,15 @@ def _merge_topk(vals, ids, k):
         hit = vals == m[:, None]
         first = (jnp.cumsum(hit.astype(jnp.int32), axis=1) == 1) & hit
         sel_id = jnp.sum(jnp.where(first, ids, 0), axis=1)
+        sel_id = jnp.where(jnp.isinf(m), -1, sel_id)
         out_v.append(m)
         out_i.append(sel_id)
         vals = jnp.where(first, _INF, vals)
     return jnp.stack(out_v, axis=1), jnp.stack(out_i, axis=1)
 
 
-def _topk_dist_kernel(q_ref, y_ref, od_ref, oi_ref, *, k, bn, n_real):
+def _topk_dist_kernel(q_ref, y_ref, m_ref, od_ref, oi_ref, *, k, bn, n_real,
+                      metric):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -47,14 +74,18 @@ def _topk_dist_kernel(q_ref, y_ref, od_ref, oi_ref, *, k, bn, n_real):
 
     q = q_ref[...].astype(jnp.float32)                              # [bq, d]
     y = y_ref[...].astype(jnp.float32)                              # [bn, d]
-    qq = jnp.sum(q * q, axis=1, keepdims=True)
-    yy = jnp.sum(y * y, axis=1, keepdims=True)
-    d = qq + yy.T - 2.0 * jax.lax.dot_general(
+    qy = jax.lax.dot_general(
         q, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    d = jnp.maximum(d, 0.0)                                         # [bq, bn]
+    if metric == "l2":
+        qq = jnp.sum(q * q, axis=1, keepdims=True)
+        yy = jnp.sum(y * y, axis=1, keepdims=True)
+        d = jnp.maximum(qq + yy.T - 2.0 * qy, 0.0)                  # [bq, bn]
+    else:                                                           # "ip"
+        d = 1.0 - qy
 
     gid = j * bn + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)  # global ids
-    d = jnp.where(gid < n_real, d, _INF)                            # mask padding
+    ok = (gid < n_real) & (m_ref[...] > 0)       # [1, bn] mask broadcasts
+    d = jnp.where(ok, d, _INF)                   # padding + masked-out slots
 
     vals = jnp.concatenate([od_ref[...], d], axis=1)                # [bq, k+bn]
     ids = jnp.concatenate([oi_ref[...], gid], axis=1)
@@ -64,21 +95,39 @@ def _topk_dist_kernel(q_ref, y_ref, od_ref, oi_ref, *, k, bn, n_real):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret",
-                                             "n_real"))
-def topk_dist_pallas(Q: jax.Array, Y: jax.Array, *, k: int, n_real: int,
+                                             "n_real", "metric"))
+def topk_dist_pallas(Q: jax.Array, Y: jax.Array, mask: jax.Array, *, k: int,
+                     n_real: int, metric: str = "l2",
                      bq: int = 8, bn: int = 512,
                      interpret: bool = False):
-    """``(dists[q,k], ids[q,k])`` of k nearest Y rows. Q, N divide blocks."""
+    """``(dists[q,k], ids[q,k])`` of the k nearest *unmasked* Y rows.
+
+    Block-spec tiling: grid (Q/bq, N/bn), candidate axis innermost; the
+    ``[bq, k]`` running top-k output blocks stay VMEM-resident across the
+    candidate sweep, with ``q[bq, d]`` / ``y[bn, d]`` / ``mask[1, bn]``
+    input blocks per step. Padding contract: Q and N must divide ``bq`` /
+    ``bn`` exactly — use :func:`repro.kernels.topk_dist.ops.topk_dist` for
+    the padding wrapper (padded candidates are excluded via the ``n_real``
+    bound). ``mask`` is ``i32[1, N]`` (nonzero = eligible); rows with fewer
+    than k eligible candidates pad with ``(inf, -1)``. ``interpret=True``
+    runs the same kernel through the Pallas interpreter (the off-TPU
+    fallback the wrapper auto-selects).
+    """
+    if metric not in _METRIC_FORMS:
+        raise ValueError(f"unsupported kernel metric form {metric!r}; "
+                         f"expected one of {_METRIC_FORMS}")
     nq, d = Q.shape
     N, _ = Y.shape
     grid = (nq // bq, N // bn)
-    kern = functools.partial(_topk_dist_kernel, k=k, bn=bn, n_real=n_real)
+    kern = functools.partial(_topk_dist_kernel, k=k, bn=bn, n_real=n_real,
+                             metric=metric)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=(
             pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
@@ -89,4 +138,4 @@ def topk_dist_pallas(Q: jax.Array, Y: jax.Array, *, k: int, n_real: int,
             jax.ShapeDtypeStruct((nq, k), jnp.int32),
         ),
         interpret=interpret,
-    )(Q, Y)
+    )(Q, Y, mask)

@@ -3,10 +3,11 @@
 Creates a :class:`~repro.api.VectorIndex` over a synthetic corpus (any
 registered metric space via ``--space``), then hands it to a
 :class:`~repro.serving.ServingEngine` with ``.serve()``: single queries
-coalesce in the micro-batcher, a stream of delete/replace ops drains
-through the fused op-tape, tau-triggered backup rebuilds keep unreachable
-points servable (dualSearch), and every query batch runs against a stable
-epoch snapshot. Reports QPS, update ops/s, update lag, recall@k vs exact
+coalesce in the micro-batcher and are tier-routed by the query planner
+(``--mode auto|graph|exact``, see docs/QUERY_PLANNER.md), a stream of
+delete/replace ops drains through the fused op-tape, tau-triggered backup
+rebuilds keep unreachable points servable (dualSearch), and every query
+batch runs against a stable epoch snapshot. Reports QPS, update ops/s, update lag, recall@k vs exact
 brute force, and unreachable counts per epoch; ``--metrics-json`` dumps
 the registry.
 
@@ -35,6 +36,10 @@ def main():
     ap.add_argument("--space", default="l2", choices=api.list_metrics())
     ap.add_argument("--strategy", "--variant", dest="strategy",
                     default="mn_ru_gamma", choices=api.list_strategies())
+    ap.add_argument("--mode", default="auto", choices=api.MODES,
+                    help="query execution tier: auto = planner-routed per "
+                         "bucket, graph = HNSW beam search, exact = Pallas "
+                         "scan tier (see docs/QUERY_PLANNER.md)")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--updates-per-round", type=int, default=100)
     ap.add_argument("--backup", action="store_true",
@@ -64,7 +69,7 @@ def main():
         max_ops_per_drain=args.max_ops_per_drain,
         tau=args.tau if args.backup else 0,
         backup_capacity=max(args.n // 8, 64) if args.backup else 0,
-        track_unreachable=True)
+        track_unreachable=True, mode=args.mode)
 
     next_label = args.n
     live = dict(enumerate(range(args.n)))  # label -> row id in X_all

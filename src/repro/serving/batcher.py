@@ -1,8 +1,11 @@
 """Dynamic query micro-batcher: coalesce singles into padded jit batches.
 
 Single-query arrivals are queued as :class:`QueryTicket`\\ s; ``flush()``
-packs them into fixed-shape batches and dispatches ONE jitted
-``batch_knn`` / ``batch_dual_search`` call per batch. Batch shapes are
+packs them into fixed-shape batches and dispatches ONE jitted call per
+batch — ``batch_knn`` / ``batch_dual_search`` on the graph tier, or the
+exact Pallas scan tier (``core.planner.exact_scan``) when the per-bucket
+planner consult says the graph walk would lose (small live set, heavy
+mark-delete churn). Batch shapes are
 bucketed to powers of two (capped at ``max_batch``), so the number of
 distinct compiled programs is ``log2(max_batch) + 1`` per (k, ef) — bounded
 recompilation no matter how ragged the arrival pattern is. Padding rows
@@ -25,6 +28,8 @@ import numpy as np
 from repro.core.backup import batch_dual_search
 from repro.core.index import HNSWParams
 from repro.core.metrics import get_metric, normalize_rows
+from repro.core.planner import (DEFAULT_PLANNER, MODES, PlannerConfig,
+                                choose_tier, exact_scan, index_stats)
 from repro.core.search import batch_knn
 
 from .metrics import MetricsRegistry
@@ -84,16 +89,28 @@ class MicroBatcher:
 
     ``search_fn(snapshot, Q) -> (labels[b, k], dists[b, k])`` can be
     injected to reroute dispatch (the engine uses this for the sharded
-    path); by default it picks ``batch_dual_search`` when the snapshot
-    carries a backup index and plain ``batch_knn`` otherwise.
+    path). The default dispatch consults the query execution planner PER
+    BUCKET: ``mode="auto"`` routes each dispatched batch to the exact
+    Pallas scan tier when the snapshot is small / churn-heavy (see
+    :mod:`repro.core.planner` and docs/QUERY_PLANNER.md) and to the graph
+    tier otherwise — ``batch_dual_search`` when the snapshot carries a
+    backup index, plain ``batch_knn`` if not. The exact tier never needs
+    the backup: a flat scan reaches unreachable points by construction.
+    ``mode="graph"`` / ``mode="exact"`` pin the tier. Planner statistics
+    are cached per snapshot epoch, so churn between epochs re-decides but
+    buckets within one flush don't re-reduce the mask.
     """
 
     def __init__(self, params: HNSWParams, k: int, ef: int | None = None,
                  max_batch: int = 64, metrics: MetricsRegistry | None = None,
                  search_fn: Callable | None = None,
-                 backup_params: HNSWParams | None = None):
+                 backup_params: HNSWParams | None = None,
+                 mode: str = "auto", planner: PlannerConfig | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if mode not in MODES:
+            raise ValueError(f"unknown query mode {mode!r}; expected one "
+                             f"of {MODES}")
         self.params = params
         self.k = k
         self.ef = ef
@@ -103,6 +120,9 @@ class MicroBatcher:
         self._normalize = get_metric(params.space).normalize_ingest
         self.metrics = metrics or MetricsRegistry()
         self.backup_params = backup_params or params
+        self.mode = mode
+        self.planner = planner if planner is not None else DEFAULT_PLANNER
+        self._stats_cache: tuple[int, object] | None = None  # (epoch, stats)
         self._search_fn = search_fn or self._default_search
         self._pending: list[QueryTicket] = []
         self._next_qid = 0
@@ -125,7 +145,21 @@ class MicroBatcher:
         return len(self._pending)
 
     # -- dispatch -----------------------------------------------------------
+    def _plan_tier(self, snapshot: EpochSnapshot) -> str:
+        """Planner consult for one bucket (stats cached per epoch)."""
+        if self.mode != "auto":
+            return self.mode
+        if self._stats_cache is None or self._stats_cache[0] != snapshot.epoch:
+            self._stats_cache = (snapshot.epoch, index_stats(snapshot.index))
+        return choose_tier(self._stats_cache[1], self.planner).tier
+
     def _default_search(self, snapshot: EpochSnapshot, Q: jnp.ndarray):
+        tier = self._plan_tier(snapshot)
+        self.metrics.counter(f"tier_{tier}_batches").inc()
+        if tier == "exact":
+            labels, _, dists = exact_scan(self.params, snapshot.index, Q,
+                                          self.k)
+            return labels, dists
         if snapshot.has_backup:
             labels, dists = batch_dual_search(self.params, snapshot.index,
                                               self.backup_params,

@@ -3,8 +3,11 @@
 One object ties the serving substrate together:
 
   * reads  — :class:`MicroBatcher` coalesces single queries and serves them
-             against the published :class:`EpochSnapshot` (dualSearch when a
-             backup index is enabled);
+             against the published :class:`EpochSnapshot`; each dispatched
+             bucket is routed by the query execution planner
+             (``mode="auto"``): HNSW beam search — dualSearch when a backup
+             index is enabled — or the exact Pallas scan tier when the
+             snapshot is small or churn-heavy (``mode=`` pins a tier);
   * writes — :class:`UpdateScheduler` queues delete/replace/insert ops and
              drains them through the fused ``apply_update_batch`` op tape
              into the back buffer;
@@ -64,6 +67,7 @@ class ServingEngine:
                  backup_params: HNSWParams | None = None,
                  mesh=None, axis: str = "data",
                  track_unreachable: bool = False,
+                 mode: str = "auto", planner=None,
                  metrics: MetricsRegistry | None = None):
         self.params = params
         self.k = k
@@ -77,6 +81,10 @@ class ServingEngine:
 
         sharded = mesh is not None
         use_backup = tau > 0 and backup_capacity > 0
+        if sharded and mode == "exact":
+            raise ValueError("the exact scan tier is not supported in "
+                             "sharded mode yet — use mode='auto' or "
+                             "'graph' (auto pins the graph tier)")
         if sharded and use_backup:
             raise ValueError("backup/dualSearch is not supported in sharded "
                              "mode yet — drop tau/backup_capacity")
@@ -91,10 +99,13 @@ class ServingEngine:
                                  self.dim, 1, dtype=index.vectors.dtype)
 
         self.store = SnapshotStore(index, backup)
+        # sharded mode pins the graph tier (the stacked index's exact scan
+        # is a follow-up); single-host dispatch consults the query planner
         self.batcher = MicroBatcher(
             params, k, ef, max_batch, metrics=self.metrics,
             search_fn=self._sharded_search if sharded else None,
-            backup_params=backup_params)
+            backup_params=backup_params, mode="graph" if sharded else mode,
+            planner=planner)
         self.scheduler = UpdateScheduler(
             params, self.dim, variant, max_ops_per_drain, tau=tau,
             backup_params=backup_params, backup_capacity=backup_capacity,

@@ -1,0 +1,202 @@
+"""Query execution planner: exact-tier parity, routing, auto >= graph."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import (IndexStats, PlannerConfig, choose_tier, exact_scan,
+                        index_stats, plan_and_search)
+from repro.core.metrics import normalize_rows
+from repro.data import clustered_vectors
+from repro.serving import MicroBatcher, SnapshotStore
+
+
+def np_brute_force(X, Q, k, space, allowed_rows):
+    """Independent numpy oracle: (labels[b,k], dists[b,k]) over allowed rows,
+    padded with (-1, inf) when fewer than k rows are allowed."""
+    if space == "cosine":
+        X = X / (np.linalg.norm(X, axis=1, keepdims=True) + 1e-12)
+        Q = Q / (np.linalg.norm(Q, axis=1, keepdims=True) + 1e-12)
+    if space == "l2":
+        D = ((Q[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+    else:
+        D = 1.0 - Q @ X.T
+    mask = np.zeros(X.shape[0], bool)
+    mask[allowed_rows] = True
+    D = np.where(mask[None, :], D, np.inf)
+    order = np.argsort(D, axis=1)[:, :k]
+    dists = np.take_along_axis(D, order, axis=1)
+    labels = np.where(np.isinf(dists), -1, order)
+    return labels, np.where(np.isinf(dists), np.inf, dists)
+
+
+def assert_rows_match(lab, dist, gt_lab, gt_dist, atol=1e-4):
+    """Per-row set equality on labels + allclose on sorted distances
+    (ties may permute equal-distance labels)."""
+    np.testing.assert_allclose(dist, gt_dist, rtol=atol, atol=atol)
+    for r in range(lab.shape[0]):
+        assert set(lab[r].tolist()) == set(gt_lab[r].tolist()), r
+
+
+@pytest.mark.parametrize("space", ["l2", "ip", "cosine"])
+def test_exact_tier_matches_numpy_with_deletions_and_filter(space):
+    n, dim, k = 350, 16, 9
+    X = clustered_vectors(n, dim, seed=2)
+    Q = clustered_vectors(6, dim, seed=3)
+    vi = api.create(space=space, dim=dim, capacity=n)
+    vi.add_items(X)
+    deleted = np.arange(0, n, 4)
+    vi.mark_deleted(deleted.astype(np.int32))
+    live = np.setdiff1d(np.arange(n), deleted)
+
+    lab, dist = vi.knn_query(Q, k=k, mode="exact")
+    gt_lab, gt_dist = np_brute_force(X, Q, k, space, live)
+    assert_rows_match(lab, dist, gt_lab, gt_dist)
+
+    # filtered: allow an even narrower label subset (includes some deleted
+    # labels, which must stay excluded)
+    allowed = np.arange(0, n, 3)
+    lab, dist = vi.knn_query(Q, k=k, filter=allowed, mode="exact")
+    gt_lab, gt_dist = np_brute_force(X, Q, k, space,
+                                     np.intersect1d(allowed, live))
+    assert_rows_match(lab, dist, gt_lab, gt_dist)
+
+
+def test_exact_tier_pads_when_fewer_than_k_allowed():
+    n, dim = 64, 8
+    X = clustered_vectors(n, dim, seed=0)
+    vi = api.create(space="l2", dim=dim, capacity=n)
+    vi.add_items(X)
+    lab, dist = vi.knn_query(X[:2], k=5, filter=np.array([7, 11]),
+                             mode="exact")
+    assert np.all(np.sort(lab[:, :2], 1) != -1)
+    assert np.all(lab[:, 2:] == -1) and np.all(np.isinf(dist[:, 2:]))
+
+
+def test_exact_tier_empty_batch():
+    vi = api.create(space="l2", dim=8, capacity=32)
+    vi.add_items(clustered_vectors(16, 8, seed=1))
+    for mode in ("auto", "graph", "exact"):
+        lab, dist = vi.knn_query(np.zeros((0, 8), np.float32), k=3,
+                                 mode=mode)
+        assert lab.shape == dist.shape == (0, 3), mode
+
+
+def test_exact_scan_core_contract(small_params, small_index, small_data):
+    """Core-level exact_scan returns (labels, slot_ids, dists) like batch_knn."""
+    Q = jnp.asarray(clustered_vectors(4, small_index.dim, seed=9))
+    labels, ids, dists = exact_scan(small_params, small_index, Q, 7)
+    assert labels.shape == ids.shape == dists.shape == (4, 7)
+    # slot ids must map to the returned labels through the index
+    lab2 = np.asarray(small_index.labels)[np.asarray(ids)]
+    np.testing.assert_array_equal(np.asarray(labels), lab2)
+    assert np.all(np.diff(np.asarray(dists), axis=1) >= -1e-6)
+
+
+def test_choose_tier_thresholds():
+    cfg = PlannerConfig(small_live=100, deleted_frac=0.5, selectivity=0.05)
+
+    def stats(live, allocated, allowed=None, cap=4096):
+        return IndexStats(capacity=cap, allocated=allocated, live=live,
+                          allowed=allowed)
+
+    # small-live rule, boundary inclusive
+    assert choose_tier(stats(100, 100), cfg).tier == "exact"
+    assert choose_tier(stats(101, 101), cfg).tier == "graph"
+    # deleted-fraction rule, boundary inclusive
+    assert choose_tier(stats(500, 1000), cfg).tier == "exact"
+    assert choose_tier(stats(501, 1000), cfg).tier == "graph"
+    # selectivity rule, boundary inclusive
+    assert choose_tier(stats(1000, 1000, allowed=50), cfg).tier == "exact"
+    assert choose_tier(stats(1000, 1000, allowed=51), cfg).tier == "graph"
+    # reasons name the trigger
+    assert "small_live" in choose_tier(stats(10, 10), cfg).reason
+    assert "deleted_frac" in choose_tier(stats(400, 1000), cfg).reason
+    assert "selectivity" in choose_tier(stats(1000, 1000, 10), cfg).reason
+
+
+def test_index_stats_and_facade_plan(small_params, small_index):
+    s = index_stats(small_index)
+    assert s.allocated == s.live == 600
+    assert s.capacity == small_index.capacity
+    assert s.deleted_frac == 0.0 and s.selectivity == 1.0
+
+    vi = api.create(space="l2", dim=8, capacity=32)
+    vi.add_items(clustered_vectors(20, 8, seed=1))
+    d = vi.plan()
+    assert d.tier == "exact" and "small_live" in d.reason
+    vi.planner = PlannerConfig(small_live=4)
+    assert vi.plan().tier == "graph"
+    assert vi.plan(filter=np.array([3])).tier == "exact"  # starved filter
+
+
+def test_mode_validation_and_forcing():
+    vi = api.create(space="l2", dim=8, capacity=32)
+    vi.add_items(clustered_vectors(16, 8, seed=1))
+    with pytest.raises(ValueError, match="mode"):
+        vi.knn_query(np.zeros(8), k=2, mode="turbo")
+    with pytest.raises(ValueError, match="mode"):
+        MicroBatcher(vi.params, k=2, mode="turbo")
+    lab_g, _ = vi.knn_query(np.zeros(8), k=4, mode="graph")
+    lab_e, _ = vi.knn_query(np.zeros(8), k=4, mode="exact")
+    assert set(lab_g[0].tolist()) <= set(range(16))
+    assert set(lab_e[0].tolist()) <= set(range(16))
+
+
+def test_plan_and_search_reports_decision(small_params, small_index):
+    Q = jnp.asarray(clustered_vectors(2, small_index.dim, seed=4))
+    _, _, _, dec = plan_and_search(small_params, small_index, Q, 3,
+                                   mode="auto")
+    assert dec.tier == "exact"          # 600 live <= default small_live
+    _, _, _, dec = plan_and_search(small_params, small_index, Q, 3,
+                                   mode="graph")
+    assert dec.tier == "graph" and "forced" in dec.reason
+
+
+def test_batcher_routes_per_bucket(small_params, small_index):
+    Q = clustered_vectors(5, small_index.dim, seed=6)
+    for mode, counter in (("auto", "tier_exact_batches"),
+                          ("graph", "tier_graph_batches"),
+                          ("exact", "tier_exact_batches")):
+        b = MicroBatcher(small_params, k=3, max_batch=4, mode=mode)
+        store = SnapshotStore(small_index)
+        tickets = [b.submit(q) for q in Q]
+        b.flush(store.current())            # 5 queries -> 2 buckets
+        assert all(t.done for t in tickets)
+        assert b.metrics.counter(counter).value == 2, mode
+
+
+def test_auto_recall_at_least_graph_under_heavy_deletion():
+    """Hypothesis property: under churn, planner routing never loses recall."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    n, dim, k = 300, 12, 8
+    X = clustered_vectors(n, dim, seed=11)
+    Q = clustered_vectors(5, dim, seed=12)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           frac=st.floats(0.55, 0.9))
+    def prop(seed, frac):
+        rng = np.random.default_rng(seed)
+        dels = rng.choice(n, size=int(n * frac), replace=False)
+        vi = api.create(space="l2", dim=dim, capacity=n,
+                        planner=PlannerConfig(small_live=0))  # only the
+        # deleted_frac trigger can fire — the property under test
+        vi.add_items(X)
+        vi.mark_deleted(dels.astype(np.int32))
+        live = np.setdiff1d(np.arange(n), dels)
+        gt_lab, _ = np_brute_force(X, Q, k, "l2", live)
+
+        def rec(lab):
+            return np.mean([len(set(lab[i]) & set(gt_lab[i])) / k
+                            for i in range(len(Q))])
+
+        assert vi.plan().tier == "exact"
+        r_auto = rec(vi.knn_query(Q, k=k, mode="auto")[0])
+        r_graph = rec(vi.knn_query(Q, k=k, mode="graph")[0])
+        assert r_auto >= r_graph - 1e-9
+        assert r_auto == pytest.approx(1.0)
+
+    prop()

@@ -88,10 +88,15 @@ def test_bucket_size():
 @pytest.mark.parametrize("n_queries", [1, 3, 8, 13])
 def test_batcher_matches_direct_batch_knn(small_params, small_index,
                                           n_queries):
-    """Padding/bucketing must not change any individual query's result."""
+    """Padding/bucketing must not change any individual query's result.
+
+    Pinned to the graph tier: the planner would route this small index to
+    the exact scan tier (covered by tests/test_planner.py), and the
+    comparison here is against direct ``batch_knn``.
+    """
     k = 10
     Q = clustered_vectors(n_queries, small_index.dim, seed=5)
-    batcher = MicroBatcher(small_params, k=k, max_batch=8)
+    batcher = MicroBatcher(small_params, k=k, max_batch=8, mode="graph")
     store = SnapshotStore(small_index)
     tickets = [batcher.submit(q) for q in Q]
     batcher.flush(store.current())

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Docs link-check: every relative link in README.md + docs/ must resolve.
+
+Scans markdown inline links (``[text](target)``) in README.md and every
+``docs/**/*.md``, skipping absolute URLs (``http(s)://``, ``mailto:``) and
+pure in-page anchors (``#...``). Relative targets are resolved against the
+file that contains them; a missing file (or missing directory) fails the
+check. Exits non-zero with one line per broken link — CI runs this as the
+``docs link-check`` step.
+
+  python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# inline links; [text](target "title") tolerated, images included via ![
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def iter_md_files():
+    yield ROOT / "README.md"
+    docs = ROOT / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.rglob("*.md"))
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        path = target.split("#", 1)[0]          # strip in-file anchors
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            line = text[:m.start()].count("\n") + 1
+            errors.append(f"{md.relative_to(ROOT)}:{line}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    files = list(iter_md_files())
+    errors = [e for md in files if md.exists() for e in check_file(md)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_links = sum(len(_LINK.findall(md.read_text(encoding="utf-8")))
+                  for md in files if md.exists())
+    print(f"checked {len(files)} markdown files, {n_links} links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
