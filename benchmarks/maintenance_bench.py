@@ -1,0 +1,228 @@
+"""Maintenance bench: sustained recall + ops/s under heavy churn.
+
+The paper's degradation story, measured end to end: run >= 20 delete/replace
+churn rounds at 50% churn against (a) a policy-maintained index
+(``MaintenancePolicy`` consolidating + repairing behind the facade) and
+(b) an unmaintained baseline that only accumulates mark-deleted slots,
+tracking recall@k vs numpy brute force and update ops/s each round. Then:
+
+  * parity   — the maintained index's final recall must sit within 0.02 of
+               a fresh-built index over the same live set;
+  * speed    — one ``consolidate_deletes`` pass must beat ``compact()``'s
+               full rebuild at the same live-set size by >= 5x;
+  * repair   — ``repair_unreachable`` must leave 0 Definition-1
+               unreachable points.
+
+Results land in ``experiments/results/BENCH_maintenance.json`` (standard
+machine-readable trajectory: per-round recall/ops/s + the summary gates)
+so CI and future PRs can diff the perf trajectory.
+
+  PYTHONPATH=src python benchmarks/maintenance_bench.py
+  PYTHONPATH=src python benchmarks/maintenance_bench.py --dry-run   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import (build, consolidate_deletes, count_unreachable,
+                        index_health, repair_unreachable)
+from repro.data import clustered_vectors, exact_knn
+
+from common import SCALE, save_result
+
+K = 10
+N_QUERIES = 32
+
+
+def recall(lab, gt):
+    return float(np.mean([len(set(lab[i]) & set(gt[i])) / K
+                          for i in range(lab.shape[0])]))
+
+
+def live_recall(vi, X_all, live, Q):
+    """recall@K of ``vi`` (graph tier) vs brute force over the live set."""
+    labels = np.fromiter(live.keys(), dtype=np.int64)
+    rows = X_all[[live[int(l)] for l in labels]]
+    gt = labels[exact_knn(rows, Q, K, vi.space)]
+    lab, _ = vi.knn_query(Q, k=K, mode="graph")
+    return recall(lab, gt)
+
+
+def churn_round(vi, rng, live, X_rows, next_label, churn, dim, seed):
+    """Delete ``churn`` live labels + replace with fresh points; returns
+    (wall seconds, new next_label)."""
+    dels = rng.choice(np.fromiter(live.keys(), dtype=np.int64), size=churn,
+                      replace=False)
+    newX = clustered_vectors(churn, dim, seed=seed)
+    news = np.arange(next_label, next_label + churn, dtype=np.int32)
+    t0 = time.perf_counter()
+    vi.mark_deleted(dels.astype(np.int32))
+    vi.replace_items(newX, news)
+    vi.index.vectors.block_until_ready()
+    dt = time.perf_counter() - t0
+    base = X_rows.shape[0]
+    for d in dels:
+        del live[int(d)]
+    for i, nl in enumerate(news):
+        live[int(nl)] = base + i
+    return dt, next_label + churn, np.concatenate([X_rows, newX])
+
+
+def time_consolidate_vs_compact(vi, reps):
+    """Best-of-reps wall seconds: one consolidation pass vs a full rebuild
+    at the same live-set size (both warmed up / pre-compiled)."""
+    params, churned = vi.params, vi.index
+    consolidate_deletes(params, churned).vectors.block_until_ready()  # warm
+    t_cons = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        consolidate_deletes(params, churned).vectors.block_until_ready()
+        t_cons = min(t_cons, time.perf_counter() - t0)
+
+    mask = np.asarray((churned.levels >= 0) & ~churned.deleted)
+    vecs = jnp.asarray(np.asarray(churned.vectors)[mask])
+    labels = jnp.asarray(np.asarray(churned.labels)[mask])
+    build(params, vecs, labels,
+          capacity=vi.capacity).vectors.block_until_ready()            # warm
+    t_reb = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        build(params, vecs, labels,
+              capacity=vi.capacity).vectors.block_until_ready()
+        t_reb = min(t_reb, time.perf_counter() - t0)
+    return t_cons, t_reb
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny corpus, 3 rounds, no results file")
+    ap.add_argument("--n", type=int, default=0, help="corpus size (0 = auto)")
+    ap.add_argument("--rounds", type=int, default=0)
+    ap.add_argument("--churn-frac", type=float, default=0.5)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing reps for the consolidate-vs-compact gate")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        n = args.n or 192
+        rounds = args.rounds or 3
+        reps = 1
+    else:
+        n = args.n or int(640 * SCALE)
+        rounds = args.rounds or 20
+        reps = args.reps
+    dim = 32
+    churn = max(int(n * args.churn_frac), 1)
+
+    X0 = clustered_vectors(n, dim, seed=0)
+    Q = clustered_vectors(N_QUERIES, dim, seed=1)
+    policy = api.MaintenancePolicy(deleted_frac=0.3, min_deleted=max(n // 8, 8),
+                                   check_every=1)
+    vi_maint = api.create(space="l2", dim=dim, capacity=n, M=8,
+                          ef_construction=64, ef_search=64,
+                          maintenance=policy)
+    vi_plain = api.create(space="l2", dim=dim, capacity=n, M=8,
+                          ef_construction=64, ef_search=64)
+    print(f"building 2 x {n} x {dim} ...", flush=True)
+    vi_maint.add_items(X0)
+    vi_plain.add_items(X0)
+
+    state = {}
+    for tag, vi in (("maint", vi_maint), ("plain", vi_plain)):
+        state[tag] = {"rng": np.random.default_rng(7), "live":
+                      dict(zip(range(n), range(n))), "X": X0.copy(),
+                      "next": n}
+
+    rows = []
+    print(f"{'round':>5} {'rec maint':>9} {'rec plain':>9} {'ops/s m':>9} "
+          f"{'ops/s p':>9} {'del% m':>7} {'del% p':>7}")
+    for rnd in range(rounds):
+        cell = {"round": rnd}
+        for tag, vi in (("maint", vi_maint), ("plain", vi_plain)):
+            s = state[tag]
+            dt, s["next"], s["X"] = churn_round(
+                vi, s["rng"], s["live"], s["X"], s["next"], churn, dim,
+                seed=1000 + rnd)
+            h = index_health(vi.index)
+            cell[f"recall_{tag}"] = live_recall(vi, s["X"], s["live"], Q)
+            cell[f"ops_per_s_{tag}"] = 2 * churn / max(dt, 1e-9)
+            cell[f"deleted_frac_{tag}"] = h.deleted_frac
+            cell[f"unreachable_def1_{tag}"] = int(h.unreachable_def1)
+        rows.append(cell)
+        print(f"{rnd:>5} {cell['recall_maint']:>9.4f} "
+              f"{cell['recall_plain']:>9.4f} "
+              f"{cell['ops_per_s_maint']:>9.1f} "
+              f"{cell['ops_per_s_plain']:>9.1f} "
+              f"{cell['deleted_frac_maint']:>7.2f} "
+              f"{cell['deleted_frac_plain']:>7.2f}", flush=True)
+
+    # --- gate 1: recall parity with a fresh build over the final live set --
+    s = state["maint"]
+    live_labels = np.fromiter(s["live"].keys(), dtype=np.int64)
+    live_rows = s["X"][[s["live"][int(l)] for l in live_labels]]
+    vi_fresh = api.create(space="l2", dim=dim, capacity=vi_maint.capacity,
+                          M=8, ef_construction=64, ef_search=64)
+    vi_fresh.add_items(live_rows, live_labels.astype(np.int32))
+    gt = live_labels[exact_knn(live_rows, Q, K, "l2")]
+    rec_maint = recall(vi_maint.knn_query(Q, k=K, mode="graph")[0], gt)
+    rec_fresh = recall(vi_fresh.knn_query(Q, k=K, mode="graph")[0], gt)
+    delta = rec_fresh - rec_maint
+    print(f"\nfinal recall@{K}: maintained {rec_maint:.4f} vs fresh-built "
+          f"{rec_fresh:.4f} (delta {delta:+.4f})")
+
+    # --- gate 2: consolidation >= 5x faster than the full rebuild ---------
+    # churn one more half-round WITHOUT maintenance to stage deleted slots
+    vi_timed = api.create(space="l2", dim=dim, capacity=vi_maint.capacity,
+                          M=8, ef_construction=64, ef_search=64)
+    vi_timed.add_items(live_rows, live_labels.astype(np.int32))
+    dels = np.random.default_rng(9).choice(live_labels, size=churn // 2,
+                                           replace=False)
+    vi_timed.mark_deleted(dels.astype(np.int32))
+    t_cons, t_reb = time_consolidate_vs_compact(vi_timed, reps)
+    speedup = t_reb / max(t_cons, 1e-12)
+    print(f"consolidate {t_cons * 1e3:.1f} ms vs full rebuild "
+          f"{t_reb * 1e3:.1f} ms -> {speedup:.1f}x")
+
+    # --- gate 3: repair leaves 0 Definition-1 unreachable points ----------
+    ix = repair_unreachable(vi_maint.params, vi_maint.index)
+    def1_after = int(count_unreachable(ix)[0])
+    print(f"Definition-1 unreachable after repair: {def1_after}")
+
+    ok = (abs(delta) <= 0.02 or rec_maint >= rec_fresh) \
+        and speedup >= 5.0 and def1_after == 0
+    print("gates:", "PASS" if ok else "FAIL")
+
+    if args.dry_run:
+        print("dry run: skipping results file")
+        return
+    save_result("BENCH_maintenance", {
+        "k": K, "dim": dim, "n": n, "rounds": rounds,
+        "churn_frac": args.churn_frac, "n_queries": N_QUERIES,
+        "policy": {"deleted_frac": policy.deleted_frac,
+                   "min_deleted": policy.min_deleted,
+                   "check_every": policy.check_every},
+        "backend_note": "CPU container: re-run on TPU for hardware numbers",
+        "rounds_data": rows,
+        "summary": {
+            "recall_maintained_final": rec_maint,
+            "recall_fresh_built": rec_fresh,
+            "recall_delta": delta,
+            "consolidate_ms": t_cons * 1e3,
+            "rebuild_ms": t_reb * 1e3,
+            "consolidate_speedup_vs_rebuild": speedup,
+            "def1_unreachable_after_repair": def1_after,
+            "gates_pass": bool(ok),
+        },
+    })
+    print("saved -> experiments/results/BENCH_maintenance.json")
+    assert ok, "maintenance acceptance gates failed"
+
+
+if __name__ == "__main__":
+    main()

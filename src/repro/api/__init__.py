@@ -13,6 +13,7 @@ The functional core (``repro.core``) stays importable for power users; this
 package is the layer examples, benchmarks, and the serving launcher build
 against.
 """
+from repro.core.maintenance import IndexHealth, MaintenancePolicy
 from repro.core.metrics import (Metric, get_metric, list_metrics,
                                 register_metric)
 from repro.core.planner import (DEFAULT_PLANNER, MODES, IndexStats,
@@ -29,4 +30,5 @@ __all__ = [
     "UpdateStrategy", "get_strategy", "list_strategies", "register_strategy",
     "DEFAULT_PLANNER", "MODES", "IndexStats", "PlanDecision",
     "PlannerConfig", "choose_tier", "index_stats",
+    "IndexHealth", "MaintenancePolicy",
 ]

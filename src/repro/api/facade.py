@@ -14,8 +14,15 @@ capacity growth, and the serving engine all sit behind it:
     labels, dists = vi.knn_query(Q, k=10, filter=allowed_labels)
     vi.mark_deleted(stale_labels)
     vi.replace_items(fresh_X, fresh_labels)       # paper Alg. 2+3 repair
+    vi.health()                                   # IndexHealth report
+    vi.consolidate()                              # reclaim deleted slots online
+    vi.repair_unreachable()                       # Definition-1 count -> 0
     vi.save("index.npz"); vi = api.VectorIndex.load("index.npz")
     engine = vi.serve(k=10, tau=400, backup_capacity=256)
+
+Pass ``maintenance=MaintenancePolicy(...)`` and the facade (and any engine
+it spawns via ``.serve()``) runs consolidation/repair automatically when
+the health report crosses the policy thresholds (docs/MAINTENANCE.md).
 
 Design notes:
 
@@ -44,6 +51,12 @@ import numpy as np
 from repro.core.hnsw import build as _build
 from repro.core.index import (HNSWIndex, HNSWParams, empty_index,
                               resize_index)
+from repro.core.common import pow2_at_least as _pow2_at_least
+from repro.core.maintenance import (IndexHealth, MaintenancePolicy,
+                                    consolidate_deletes, count_unreachable,
+                                    index_health, rebuild_index,
+                                    repair_unreachable as _repair_unreachable,
+                                    run_maintenance)
 from repro.core.metrics import get_metric, normalize_rows
 from repro.core.planner import (DEFAULT_PLANNER, PlanDecision, PlannerConfig,
                                 choose_tier, index_stats, plan_and_search)
@@ -53,11 +66,6 @@ from repro.core.update import (OP_DELETE, OP_INSERT, OP_REPLACE, OP_NOP,
 
 _SAVE_VERSION = 1
 _MAX_TAPE = 128          # mutation tape chunk cap (pow2; bounds compile count)
-
-
-def _pow2_at_least(n: int) -> int:
-    n = max(int(n), 1)
-    return 1 << (n - 1).bit_length()
 
 
 class VectorIndex:
@@ -73,6 +81,7 @@ class VectorIndex:
                  alpha: float = 1.0, strategy: str = "mn_ru_gamma",
                  seed: int = 0, dtype=jnp.float32,
                  planner: PlannerConfig | None = None,
+                 maintenance: MaintenancePolicy | None = None,
                  _index: HNSWIndex | None = None,
                  _next_label: int = 0):
         if dim <= 0:
@@ -81,6 +90,8 @@ class VectorIndex:
         get_strategy(strategy)                   # fail-fast, uniform error
         self.strategy = strategy
         self.planner = planner if planner is not None else DEFAULT_PLANNER
+        self.maintenance = maintenance
+        self._ops_since_maintenance = 0
         self.params = HNSWParams(
             M=M, M0=M0 if M0 is not None else 2 * M, num_layers=num_layers,
             ef_construction=ef_construction, ef_search=ef_search,
@@ -178,6 +189,24 @@ class VectorIndex:
                 self.params, self._index, jnp.asarray(o), jnp.asarray(l),
                 jnp.asarray(x), self.strategy)
 
+    def _maybe_maintain(self, n_ops: int) -> None:
+        """Policy-gated online maintenance behind the mutation calls.
+
+        With ``maintenance=MaintenancePolicy(...)`` the facade consults
+        :func:`~repro.core.maintenance.index_health` every
+        ``policy.check_every`` applied ops and runs the due passes
+        (consolidation, then repair) in place — the caller just sees
+        deleted slots turn back into free capacity.
+        """
+        if self.maintenance is None:
+            return
+        self._ops_since_maintenance += n_ops
+        if self._ops_since_maintenance < self.maintenance.check_every:
+            return
+        self._ops_since_maintenance = 0
+        self._index, _ = run_maintenance(self.params, self._index,
+                                         self.maintenance)
+
     # -- writes -------------------------------------------------------------
 
     def add_items(self, X, labels=None) -> np.ndarray:
@@ -214,13 +243,16 @@ class VectorIndex:
         else:
             self._apply_tape(np.full(n, OP_INSERT, np.int32), labels, X)
         self._commit_labels(labels)
+        self._maybe_maintain(n)
         return labels
 
     def mark_deleted(self, labels) -> None:
-        """markDelete: flag points; they stay traversable until replaced."""
+        """markDelete: flag points; they stay traversable until replaced
+        (or until maintenance consolidates them away)."""
         labels = np.atleast_1d(np.asarray(labels, np.int32))
         self._apply_tape(np.full(len(labels), OP_DELETE, np.int32), labels,
                          np.zeros((len(labels), self.dim), np.float32))
+        self._maybe_maintain(len(labels))
 
     def replace_items(self, X, labels) -> np.ndarray:
         """replaced_update (paper Alg. 2+3): each point reuses a deleted slot
@@ -254,6 +286,7 @@ class VectorIndex:
             self.grow(self._used_slots() + fallback_inserts)
         self._apply_tape(np.full(n, OP_REPLACE, np.int32), labels, X)
         self._commit_labels(labels)
+        self._maybe_maintain(n)
         return labels
 
     # -- capacity -----------------------------------------------------------
@@ -268,26 +301,51 @@ class VectorIndex:
         return self.capacity
 
     def compact(self, capacity: int | None = None) -> int:
-        """Rebuild over live points only, reclaiming mark-deleted slots.
+        """Full blocking rebuild over live points only
+        (:func:`~repro.core.maintenance.rebuild_index`).
 
         The graph is reconstructed (fresh build — deleted points no longer
-        pollute neighbourhoods), the capacity defaults to the current one
-        and may be shrunk as long as the live set fits. Returns the new
-        capacity."""
-        mask = np.asarray((self._index.levels >= 0) & ~self._index.deleted)
-        vecs = np.asarray(self._index.vectors)[mask]
-        labels = np.asarray(self._index.labels)[mask]
-        live = int(mask.sum())
-        new_cap = _pow2_at_least(max(capacity or self.capacity, live, 1))
-        if live == 0:
-            self._index = empty_index(self.params, new_cap, self.dim,
-                                      self._seed,
-                                      dtype=self._index.vectors.dtype)
-        else:
-            self._index = _build(
-                self.params, jnp.asarray(vecs, self._index.vectors.dtype),
-                jnp.asarray(labels), seed=self._seed, capacity=new_cap)
+        pollute neighbourhoods and accumulated topology damage is erased),
+        the capacity defaults to the current one and may be shrunk as long
+        as the live set fits. Returns the new capacity. For routine online
+        reclamation prefer :meth:`consolidate` (or an automatic
+        ``maintenance=`` policy) — it repairs only the affected
+        neighbourhoods at a fraction of the cost."""
+        self._index = rebuild_index(self.params, self._index,
+                                    capacity=capacity, seed=self._seed)
         return self.capacity
+
+    # -- maintenance --------------------------------------------------------
+
+    def health(self) -> IndexHealth:
+        """The :class:`~repro.core.maintenance.IndexHealth` report: live /
+        deleted / unreachable counts, deleted fraction, in-degree
+        histogram. ``health().asdict()`` gives plain python scalars."""
+        return index_health(self._index)
+
+    def consolidate(self) -> int:
+        """Batched delete consolidation
+        (:func:`~repro.core.maintenance.consolidate_deletes`): repair every
+        neighbourhood that points into the mark-deleted set in one
+        vectorized pass, then reclaim the deleted slots as free capacity —
+        no rebuild, no epoch of downtime. Returns the number of slots
+        reclaimed."""
+        reclaimed = self.deleted_count
+        self._index = consolidate_deletes(self.params, self._index)
+        return reclaimed
+
+    def repair_unreachable(self, max_passes: int = 3) -> int:
+        """Re-link unreachable live points
+        (:func:`~repro.core.maintenance.repair_unreachable`), re-checking
+        between sweeps, until the paper's Definition-1 count hits zero or
+        ``max_passes`` is exhausted. Returns the remaining Definition-1
+        count (0 on success)."""
+        for _ in range(max_passes):
+            def1, _bfs = count_unreachable(self._index)
+            if int(def1) == 0:
+                return 0
+            self._index = _repair_unreachable(self.params, self._index)
+        return int(count_unreachable(self._index)[0])
 
     # -- reads --------------------------------------------------------------
 
@@ -415,6 +473,10 @@ class VectorIndex:
         from repro.serving import ServingEngine
         engine_kwargs.setdefault("variant", self.strategy)
         engine_kwargs.setdefault("planner", self.planner)
+        if engine_kwargs.get("mesh") is None:
+            # sharded engines don't support maintenance passes yet — an
+            # inherited policy must not make .serve(mesh=...) raise
+            engine_kwargs.setdefault("maintenance", self.maintenance)
         return ServingEngine(self.params, self._index, **engine_kwargs)
 
 

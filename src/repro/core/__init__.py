@@ -23,6 +23,9 @@ from .update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
 from .planner import (DEFAULT_PLANNER, MODES, IndexStats, PlanDecision,
                       PlannerConfig, choose_tier, exact_scan, index_stats,
                       plan_and_search)
+from .maintenance import (IndexHealth, MaintenancePolicy,
+                          consolidate_deletes, index_health, rebuild_index,
+                          repair_unreachable, run_maintenance)
 from .reach import (bfs_reachable, bfs_unreachable, count_unreachable,
                     indegree, indegree_unreachable)
 from .backup import (DualIndexManager, batch_dual_search, dual_search,
@@ -50,6 +53,10 @@ __all__ = [
     "delete_and_update_batch", "first_deleted_slot", "first_free_slot",
     "mark_delete", "mark_delete_jit", "num_deleted",
     "replaced_update", "replaced_update_jit", "slot_of_label",
+    # online maintenance (consolidation / repair / health / policy)
+    "IndexHealth", "MaintenancePolicy", "consolidate_deletes",
+    "index_health", "rebuild_index", "repair_unreachable",
+    "run_maintenance",
     # reachability
     "bfs_reachable", "bfs_unreachable", "count_unreachable", "indegree",
     "indegree_unreachable",

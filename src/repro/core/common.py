@@ -20,6 +20,12 @@ INF = jnp.float32(jnp.inf)
 INVALID = jnp.int32(-1)
 
 
+def pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (host-side; capacities are always pow2)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
 def masked_gather_rows(X: jax.Array, ids: jax.Array) -> jax.Array:
     """Gather rows ``X[ids]`` treating negative ids as index 0 (caller masks)."""
     return X[jnp.clip(ids, 0, X.shape[0] - 1)]

@@ -1,0 +1,417 @@
+"""Online index maintenance: consolidation, unreachable repair, health.
+
+The paper diagnoses two failure modes of HNSW under real-time updates —
+performance degradation as mark-deleted slots accumulate, and unreachable
+points (Definition 1) left behind by neighbourhood churn. The rest of the
+repo *detects* both (``core/reach.py``, the serving engine's
+``unreachable_indegree`` gauge); this module *fixes* them online, without
+the full blocking rebuild that used to be the only reclamation path:
+
+  * :func:`consolidate_deletes` — FreshDiskANN-style batched delete
+    consolidation: ONE vectorized pass finds every live vertex with an edge
+    into a mark-deleted slot, re-prunes each from its ``N(v) ∪ ⋃ N(d)``
+    candidate pool (one batched distance contraction + a vmapped alpha-RNG
+    sweep, no per-op ``lax.scan``), then clears the deleted slots
+    (``levels = -1``) so they become free capacity.
+  * :func:`repair_unreachable` — batch re-link every unreachable live
+    point (Definition-1 ∪ BFS) through the layer-inheriting reinsert path,
+    with a forced reverse edge as the connectivity backstop, driving the
+    Definition-1 count to zero.
+  * :func:`index_health` — a jit-able :class:`IndexHealth` report (live /
+    deleted / unreachable counts, in-degree histogram) that
+    :class:`MaintenancePolicy` consumes to decide *when* the passes run —
+    between serving ``pump()`` ticks off-snapshot, or transparently behind
+    the facade's mutation calls.
+  * :func:`rebuild_index` — the full rebuild over live points, kept as the
+    escape hatch (``VectorIndex.compact()`` routes here).
+
+Consolidation vs rebuild trade-off: consolidation touches only the
+affected neighbourhoods (one compiled sweep over the slot array), so it is
+far cheaper than re-running ``build``'s sequential insert loop — but it
+inherits the existing graph topology. A long-degraded graph still benefits
+from an occasional :func:`rebuild_index`. See docs/MAINTENANCE.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import INF, INVALID, pow2_at_least
+from .index import HNSWIndex, HNSWParams, empty_index
+from .metrics import dist_point
+from .prune import alpha_rng_select
+from .reach import bfs_unreachable, count_unreachable, indegree, \
+    indegree_unreachable
+
+
+# ---------------------------------------------------------------------------
+# health report
+# ---------------------------------------------------------------------------
+
+#: in-degree histogram bin splits: bin b counts live points whose total
+#: in-degree falls in [HIST_SPLITS[b-1], HIST_SPLITS[b]) — i.e. the bins are
+#: 0, 1, [2,4), [4,8), [8,16), [16,32), [32,64), 64+. Bin 0 is exactly the
+#: paper's Definition-1 precondition (zero in-edges).
+HIST_SPLITS = (1, 2, 4, 8, 16, 32, 64)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["capacity", "allocated", "live", "deleted",
+                 "unreachable_def1", "unreachable_bfs", "max_layer",
+                 "indegree_hist"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class IndexHealth:
+    """Jit-able index health report (all fields are device scalars/arrays)."""
+    capacity: jax.Array          # i32[] slot-array length N
+    allocated: jax.Array         # i32[] slots with levels >= 0
+    live: jax.Array              # i32[] allocated and not mark-deleted
+    deleted: jax.Array           # i32[] allocated and mark-deleted
+    unreachable_def1: jax.Array  # i32[] paper Definition 1 count
+    unreachable_bfs: jax.Array   # i32[] BFS-unreachable count
+    max_layer: jax.Array         # i32[] current top layer (-1 = empty)
+    indegree_hist: jax.Array     # i32[len(HIST_SPLITS)+1] live in-degree bins
+
+    @property
+    def deleted_frac(self) -> float:
+        """Mark-deleted fraction of allocated slots (0 when empty)."""
+        return float(self.deleted) / max(float(self.allocated), 1.0)
+
+    def asdict(self) -> dict:
+        """Host-side summary (python scalars; JSON/metrics friendly)."""
+        return {
+            "capacity": int(self.capacity),
+            "allocated": int(self.allocated),
+            "live": int(self.live),
+            "deleted": int(self.deleted),
+            "deleted_frac": self.deleted_frac,
+            "unreachable_def1": int(self.unreachable_def1),
+            "unreachable_bfs": int(self.unreachable_bfs),
+            "max_layer": int(self.max_layer),
+            "indegree_hist": np.asarray(self.indegree_hist).tolist(),
+        }
+
+    def __repr__(self) -> str:
+        return (f"IndexHealth(live={int(self.live)}, "
+                f"deleted={int(self.deleted)} "
+                f"({self.deleted_frac:.1%} of allocated), "
+                f"unreachable_def1={int(self.unreachable_def1)}, "
+                f"unreachable_bfs={int(self.unreachable_bfs)})")
+
+
+@jax.jit
+def index_health(index: HNSWIndex) -> IndexHealth:
+    """Gather the :class:`IndexHealth` report in one jitted program.
+
+    A handful of O(N) reductions plus the BFS reachability fix-point —
+    cheap next to one update drain, which is why the maintenance policy can
+    afford to consult it every cycle.
+    """
+    alloc = index.levels >= 0
+    live = alloc & ~index.deleted
+    u_def1, u_bfs = count_unreachable(index)
+    deg = indegree(index)
+    nbins = len(HIST_SPLITS) + 1
+    b = jnp.searchsorted(jnp.asarray(HIST_SPLITS, jnp.int32), deg,
+                         side="right")
+    hist = jnp.zeros((nbins,), jnp.int32).at[
+        jnp.where(live, b, nbins)].add(1, mode="drop")
+    return IndexHealth(
+        capacity=jnp.int32(index.capacity),
+        allocated=jnp.sum(alloc).astype(jnp.int32),
+        live=jnp.sum(live).astype(jnp.int32),
+        deleted=jnp.sum(alloc & index.deleted).astype(jnp.int32),
+        unreachable_def1=u_def1.astype(jnp.int32),
+        unreachable_bfs=u_bfs.astype(jnp.int32),
+        max_layer=index.max_layer.astype(jnp.int32),
+        indegree_hist=hist,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched delete consolidation (FreshDiskANN-style)
+# ---------------------------------------------------------------------------
+
+def _consolidate_layer(params: HNSWParams, layer_nbrs: jax.Array,
+                       vectors: jax.Array, live: jax.Array,
+                       del_mask: jax.Array, layer: int) -> jax.Array:
+    """Re-prune every live row with an edge into a deleted slot (one layer).
+
+    ``layer_nbrs``: [N, M0] adjacency of one layer; returns the repaired
+    copy. Affected vertices re-select from ``N(v) ∪ ⋃_{d∈N(v)∩D} N(d)``,
+    reduced to the ``3*M0`` nearest candidates by ONE batched distance
+    contraction before the (vmapped) alpha-RNG dominance sweep — the sweep
+    is the expensive part, so the pre-reduction keeps its lane count
+    bounded by the degree, not the pool square.
+    """
+    N, M0 = layer_nbrs.shape
+    m_l = params.m_for_layer(layer)
+
+    rc = jnp.clip(layer_nbrs, 0)
+    edge_to_del = (layer_nbrs >= 0) & del_mask[rc]            # [N, M0]
+    affected = live & jnp.any(edge_to_del, axis=1)            # [N]
+
+    # candidate pool per vertex: own row ∪ rows of its deleted neighbours
+    ext = jnp.where(edge_to_del[:, :, None], layer_nbrs[rc], INVALID)
+    pool = jnp.concatenate([layer_nbrs, ext.reshape(N, M0 * M0)], axis=1)
+    k_sel = min(pool.shape[1], 3 * M0)
+
+    def repair_one(v, vpool):
+        pc = jnp.clip(vpool, 0)
+        ok = (vpool >= 0) & live[pc] & (vpool != v)
+        dq = jnp.where(ok, dist_point(params.space, vectors[v], vectors[pc]),
+                       INF)
+        ids = jnp.where(ok, vpool, INVALID)
+        # ONE contraction ranked the whole pool; keep the k_sel nearest so
+        # the dominance sweep below scans a bounded candidate list
+        order = jnp.argsort(dq)[:k_sel]
+        sel, _ = alpha_rng_select(ids[order], dq[order],
+                                  vectors[pc[order]], m_l, params.alpha,
+                                  params.space)
+        row = jnp.full((M0,), INVALID, jnp.int32).at[:m_l].set(sel[:m_l])
+        return row
+
+    new_rows = jax.vmap(repair_one)(jnp.arange(N, dtype=jnp.int32), pool)
+    return jnp.where(affected[:, None], new_rows, layer_nbrs)
+
+
+def _consolidate(params: HNSWParams, index: HNSWIndex,
+                 del_mask: jax.Array) -> HNSWIndex:
+    alloc = index.levels >= 0
+    live = alloc & ~index.deleted
+    nbrs = index.neighbors
+    for layer in range(params.num_layers):
+        nbrs = nbrs.at[layer].set(_consolidate_layer(
+            params, nbrs[layer], index.vectors, live, del_mask, layer))
+
+    # clear the consolidated slots: they become free capacity (levels = -1)
+    labels = jnp.where(del_mask, INVALID, index.labels)
+    levels = jnp.where(del_mask, -1, index.levels)
+    deleted = index.deleted & ~del_mask
+    nbrs = jnp.where(del_mask[None, :, None], INVALID, nbrs)
+
+    # re-derive the entry invariant: entry lives at the top remaining layer
+    live_new = levels >= 0
+    lvl_masked = jnp.where(live_new, levels, -1)
+    top = jnp.argmax(lvl_masked).astype(jnp.int32)
+    new_max = lvl_masked[top].astype(jnp.int32)
+    keep = (index.entry >= 0) & live_new[jnp.clip(index.entry, 0)] \
+        & (lvl_masked[jnp.clip(index.entry, 0)] == new_max)
+    entry = jnp.where(new_max < 0, INVALID,
+                      jnp.where(keep, index.entry, top)).astype(jnp.int32)
+    count = jnp.sum(live_new).astype(jnp.int32)
+    return HNSWIndex(index.vectors, labels, levels, nbrs, deleted, entry,
+                     new_max, count, index.rng)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def consolidate_deletes(params: HNSWParams, index: HNSWIndex) -> HNSWIndex:
+    """Batched delete consolidation: repair all affected neighbourhoods in
+    one pass, then reclaim every mark-deleted slot as free capacity.
+
+    FreshDiskANN's consolidation discipline on the tensorised index: every
+    live vertex ``v`` with an edge into the deleted set ``D`` re-selects
+    its row from ``N(v) ∪ ⋃_{d ∈ N(v) ∩ D} N(d) \\ D`` under the alpha-RNG
+    rule (``params.alpha``), vectorized across ALL vertices and repaired
+    layer by layer — no per-op ``lax.scan``, one compiled sweep regardless
+    of how many deletes accumulated. Deleted slots then drop out of the
+    graph entirely (``levels = -1``, rows cleared, labels freed), the entry
+    point / ``max_layer`` / ``count`` invariants are re-derived, and the
+    freed slots are reusable by any later insert.
+
+    Idempotent: with no mark-deleted slots the index is returned untouched.
+    Consolidation can orphan a point whose only in-edges ran through
+    ``D`` — run :func:`repair_unreachable` after (the policy driver does).
+    """
+    del_mask = index.deleted & (index.levels >= 0)
+    return jax.lax.cond(
+        jnp.any(del_mask),
+        lambda ix: _consolidate(params, ix, del_mask),
+        lambda ix: ix, index)
+
+
+# ---------------------------------------------------------------------------
+# unreachable-point repair
+# ---------------------------------------------------------------------------
+
+def _ensure_in_edge(params: HNSWParams, index: HNSWIndex,
+                    pid: jax.Array) -> HNSWIndex:
+    """Connectivity backstop: guarantee ``pid`` keeps >= 1 in-edge.
+
+    The reinsert's reverse-edge pass (`add_reverse_edges`) may prune
+    ``pid`` straight back out of every full neighbour row, leaving it
+    Definition-1 unreachable again. When none of ``pid``'s out-neighbours
+    points back, force the nearest layer-0 out-neighbour to link ``pid``
+    (into a free slot if it has one, else evicting its farthest edge) —
+    the same keep-connected override hnswlib applies.
+    """
+    L, N, M0 = index.neighbors.shape
+    out = index.neighbors[:, pid, :]                         # [L, M0]
+    oc = jnp.clip(out, 0)
+    rows_of_out = index.neighbors[jnp.arange(L)[:, None, None], oc[:, :, None],
+                                  jnp.arange(M0)[None, None, :]]  # [L, M0, M0]
+    has_in = jnp.any((rows_of_out == pid) & (out[:, :, None] >= 0))
+
+    e = index.neighbors[0, pid, 0]            # nearest layer-0 out-neighbour
+
+    def force(nbrs):
+        ec = jnp.clip(e, 0)
+        erow = nbrs[0, ec]
+        free = erow < 0
+        ed = jnp.where(free, -INF,
+                       dist_point(params.space, index.vectors[ec],
+                                  index.vectors[jnp.clip(erow, 0)]))
+        pos = jnp.where(jnp.any(free), jnp.argmax(free), jnp.argmax(ed))
+        return nbrs.at[0, ec, pos].set(pid)
+
+    nbrs = jax.lax.cond((e >= 0) & ~has_in, force, lambda n: n,
+                        index.neighbors)
+    return dataclasses.replace(index, neighbors=nbrs)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def repair_unreachable(params: HNSWParams, index: HNSWIndex) -> HNSWIndex:
+    """Batch re-link every unreachable live point back into the graph.
+
+    Sweeps the union of the paper's Definition-1 criterion
+    (:func:`~repro.core.reach.indegree_unreachable`) and BFS
+    unreachability, then re-links each point through the layer-inheriting
+    reinsert path (paper Algorithm 3: greedy descent above its level, beam
+    search + alpha-RNG select + reverse edges at its levels), followed by
+    the :func:`_ensure_in_edge` backstop. One compiled program; the loop
+    bound is the (traced) unreachable count, so a healthy index pays only
+    the detection sweep.
+
+    Repairing point A can, rarely, evict point B's last in-edge — callers
+    that need a hard Definition-1 == 0 guarantee loop this pass (see
+    :func:`run_maintenance` / ``VectorIndex.repair_unreachable``, which
+    re-check and converge in practice within a pass or two).
+    """
+    # local import: update.py imports nothing from this module, so the
+    # dependency stays one-directional at runtime (both live in core)
+    from .update import _update_reinsert
+
+    mask = indegree_unreachable(index) | bfs_unreachable(index)
+    N = index.capacity
+    order = jnp.argsort(jnp.where(mask, jnp.arange(N), N))   # unreachable first
+    n_u = jnp.sum(mask).astype(jnp.int32)
+
+    def body(i, ix):
+        pid = order[i]
+        ix = _update_reinsert(params, ix, ix.vectors[pid], pid, params.alpha)
+        return _ensure_in_edge(params, ix, pid)
+
+    return jax.lax.fori_loop(0, n_u, body, index)
+
+
+# ---------------------------------------------------------------------------
+# full rebuild (the old VectorIndex.compact) — kept as the escape hatch
+# ---------------------------------------------------------------------------
+
+def rebuild_index(params: HNSWParams, index: HNSWIndex,
+                  capacity: int | None = None, seed: int = 0) -> HNSWIndex:
+    """Full blocking rebuild over live points only (host-side).
+
+    The graph is reconstructed from scratch — deleted points no longer
+    pollute neighbourhoods and accumulated topology damage is erased — at
+    the cost of ``build``'s sequential insert loop. ``capacity`` defaults
+    to the current one and may shrink as long as the live set fits
+    (pow2-rounded). This is ``VectorIndex.compact()``'s engine; prefer
+    :func:`consolidate_deletes` for routine online reclamation.
+    """
+    from .hnsw import build
+
+    mask = np.asarray((index.levels >= 0) & ~index.deleted)
+    vecs = np.asarray(index.vectors)[mask]
+    labels = np.asarray(index.labels)[mask]
+    live = int(mask.sum())
+    new_cap = pow2_at_least(max(capacity or index.capacity, live, 1))
+    if live == 0:
+        return empty_index(params, new_cap, index.dim, seed,
+                           dtype=index.vectors.dtype)
+    return build(params, jnp.asarray(vecs, index.vectors.dtype),
+                 jnp.asarray(labels), seed=seed, capacity=new_cap)
+
+
+# ---------------------------------------------------------------------------
+# policy: when to run which pass
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePolicy:
+    """Health-driven trigger thresholds for the online maintenance passes.
+
+    Consumed by the serving engine (consulted between ``pump()`` ticks,
+    passes run on the back buffer and swap in as a new epoch) and by the
+    facade (consulted after mutation batches). All knobs are documented in
+    docs/MAINTENANCE.md.
+    """
+    deleted_frac: float = 0.25   # consolidate at/above this mark-deleted
+                                 # fraction of allocated slots
+    min_deleted: int = 32        # ... and only once this many slots are
+                                 # mark-deleted (skip trivia)
+    unreachable: int = 0         # repair when the Definition-1 count
+                                 # exceeds this
+    check_every: int = 64        # facade: consult health every N applied
+                                 # ops (the engine has its own pump-scale
+                                 # cadence knob, ServingEngine's
+                                 # maintain_every)
+    repair_passes: int = 3       # max repair sweeps per trigger (re-checked
+                                 # between sweeps; converges in 1-2)
+
+    def __post_init__(self):
+        if not 0.0 < self.deleted_frac <= 1.0:
+            raise ValueError(f"deleted_frac must be in (0, 1], got "
+                             f"{self.deleted_frac}")
+        if self.check_every < 1 or self.repair_passes < 0:
+            raise ValueError("check_every must be >= 1 and repair_passes "
+                             ">= 0")
+
+    def should_consolidate(self, h: IndexHealth) -> bool:
+        return (int(h.deleted) >= max(self.min_deleted, 1)
+                and h.deleted_frac >= self.deleted_frac)
+
+    def should_repair(self, h: IndexHealth) -> bool:
+        return int(h.unreachable_def1) > self.unreachable
+
+
+def run_maintenance(params: HNSWParams, index: HNSWIndex,
+                    policy: MaintenancePolicy,
+                    health: IndexHealth | None = None
+                    ) -> tuple[HNSWIndex, dict]:
+    """One policy consult + any due passes (host-side driver).
+
+    Returns ``(index, report)`` where ``report`` records what ran:
+    ``{"consolidated": bool, "reclaimed": int, "repair_passes": int,
+    "unreachable_def1": int}``. Repair follows consolidation because
+    clearing deleted slots can orphan points whose in-edges ran through
+    them; the repair loop re-checks the Definition-1 count between sweeps
+    and stops at ``policy.repair_passes``.
+    """
+    h = health if health is not None else index_health(index)
+    report = {"consolidated": False, "reclaimed": 0, "repair_passes": 0,
+              "unreachable_def1": int(h.unreachable_def1)}
+    ran = False
+    if policy.should_consolidate(h):
+        index = consolidate_deletes(params, index)
+        report["consolidated"] = True
+        report["reclaimed"] = int(h.deleted)
+        ran = True
+    if ran or policy.should_repair(h):
+        for _ in range(policy.repair_passes):
+            def1, _bfs = count_unreachable(index)
+            report["unreachable_def1"] = int(def1)
+            if int(def1) <= policy.unreachable:
+                break
+            index = repair_unreachable(params, index)
+            report["repair_passes"] += 1
+        else:
+            def1, _bfs = count_unreachable(index)
+            report["unreachable_def1"] = int(def1)
+    return index, report

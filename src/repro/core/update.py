@@ -59,18 +59,44 @@ def mark_delete_jit(index: HNSWIndex, label: jax.Array) -> HNSWIndex:
     return mark_delete(index, label)
 
 
-def first_deleted_slot(index: HNSWIndex) -> jax.Array:
-    live_deleted = index.deleted & (index.levels >= 0)
-    cand = jnp.where(live_deleted, jnp.arange(index.capacity), index.capacity)
+def _reuse_cursor(index: HNSWIndex, salt: jax.Array) -> jax.Array:
+    """Deterministic rotating offset for slot reuse.
+
+    Always taking the LOWEST eligible slot hammers one graph region under
+    replace-heavy tapes (every reused slot — and therefore every repair —
+    lands in the same low-id neighbourhoods, skewing hotspots). Folding the
+    level-sampling key with the allocation count and a caller salt (the
+    current eligible-slot count, so back-to-back replaces rotate too)
+    yields a pseudo-random start that is a pure function of the index
+    state: same index in, same slot out, under jit and across hosts.
+    """
+    key = jax.random.fold_in(index.rng, index.count)
+    key = jax.random.fold_in(key, salt)
+    return jax.random.randint(key, (), 0, index.capacity, jnp.int32)
+
+
+def _first_slot_from(mask: jax.Array, start: jax.Array,
+                     capacity: int) -> jax.Array:
+    """First True slot at/after ``start`` in rotated order (wrapping)."""
+    rank = (jnp.arange(capacity, dtype=jnp.int32) - start) % capacity
+    cand = jnp.where(mask, rank, capacity)
     m = jnp.min(cand)
-    return jnp.where(m == index.capacity, INVALID, m).astype(jnp.int32)
+    return jnp.where(m == capacity, INVALID,
+                     (start + m) % capacity).astype(jnp.int32)
+
+
+def first_deleted_slot(index: HNSWIndex) -> jax.Array:
+    """Next mark-deleted slot to reuse (-1 if none), cursor-rotated."""
+    live_deleted = index.deleted & (index.levels >= 0)
+    start = _reuse_cursor(index, jnp.sum(live_deleted).astype(jnp.int32))
+    return _first_slot_from(live_deleted, start, index.capacity)
 
 
 def first_free_slot(index: HNSWIndex) -> jax.Array:
+    """Next free slot for a fresh insert (-1 if full), cursor-rotated."""
     free = index.levels < 0
-    cand = jnp.where(free, jnp.arange(index.capacity), index.capacity)
-    m = jnp.min(cand)
-    return jnp.where(m == index.capacity, INVALID, m).astype(jnp.int32)
+    start = _reuse_cursor(index, jnp.sum(free).astype(jnp.int32))
+    return _first_slot_from(free, start, index.capacity)
 
 
 def num_deleted(index: HNSWIndex) -> jax.Array:

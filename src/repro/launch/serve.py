@@ -6,7 +6,9 @@ registered metric space via ``--space``), then hands it to a
 coalesce in the micro-batcher and are tier-routed by the query planner
 (``--mode auto|graph|exact``, see docs/QUERY_PLANNER.md), a stream of
 delete/replace ops drains through the fused op-tape, tau-triggered backup
-rebuilds keep unreachable points servable (dualSearch), and every query
+rebuilds keep unreachable points servable (dualSearch), ``--maintenance``
+turns on the health-driven policy (batched delete consolidation +
+unreachable repair between ticks, docs/MAINTENANCE.md), and every query
 batch runs against a stable epoch snapshot. Reports QPS, update ops/s, update lag, recall@k vs exact
 brute force, and unreachable counts per epoch; ``--metrics-json`` dumps
 the registry.
@@ -44,6 +46,21 @@ def main():
     ap.add_argument("--updates-per-round", type=int, default=100)
     ap.add_argument("--backup", action="store_true",
                     help="enable tau-triggered backup index + dualSearch")
+    ap.add_argument("--maintenance", action="store_true",
+                    help="enable the health-driven maintenance policy: "
+                         "batched delete consolidation + unreachable-point "
+                         "repair between pump() ticks (docs/MAINTENANCE.md)")
+    ap.add_argument("--maint-deleted-frac", type=float, default=0.25,
+                    help="consolidate when the mark-deleted fraction of "
+                         "allocated slots reaches this")
+    ap.add_argument("--maint-min-deleted", type=int, default=32,
+                    help="...and at least this many slots are mark-deleted")
+    ap.add_argument("--maint-unreachable", type=int, default=0,
+                    help="repair when the Definition-1 unreachable count "
+                         "exceeds this")
+    ap.add_argument("--maint-every", type=int, default=1,
+                    help="consult the health report every N pump() ticks "
+                         "(the engine's maintain_every)")
     ap.add_argument("--tau", type=int, default=400)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-ops-per-drain", type=int, default=128)
@@ -64,12 +81,19 @@ def main():
     vindex.index.vectors.block_until_ready()
     print(f"  built in {time.time() - t0:.1f}s")
 
+    policy = None
+    if args.maintenance:
+        policy = api.MaintenancePolicy(
+            deleted_frac=args.maint_deleted_frac,
+            min_deleted=args.maint_min_deleted,
+            unreachable=args.maint_unreachable)
     engine = vindex.serve(
         k=args.k, max_batch=args.max_batch,
         max_ops_per_drain=args.max_ops_per_drain,
         tau=args.tau if args.backup else 0,
         backup_capacity=max(args.n // 8, 64) if args.backup else 0,
-        track_unreachable=True, mode=args.mode)
+        track_unreachable=True, mode=args.mode, maintenance=policy,
+        maintain_every=args.maint_every)
 
     next_label = args.n
     live = dict(enumerate(range(args.n)))  # label -> row id in X_all
@@ -141,6 +165,8 @@ def main():
     recall = np.mean([len(set(lab_np[i]) & set(gt[i])) / args.k
                       for i in range(len(Q))])
     print(f"final recall@{args.k} over live set: {recall:.4f}")
+    from repro.core import index_health
+    print(f"final health: {index_health(engine.snapshot().index)!r}")
     print(engine.metrics.report())
     if args.metrics_json:
         with open(args.metrics_json, "w") as f:

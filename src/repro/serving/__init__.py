@@ -9,6 +9,8 @@ The blessed way to construct an engine is
 plus its metric space and update strategy; the classes here remain public
 for drivers that manage the pytree themselves.
 """
+from repro.core.maintenance import MaintenancePolicy
+
 from .batcher import MicroBatcher, QueryTicket, bucket_size, pow2_floor
 from .engine import PumpStats, ServingEngine
 from .metrics import Counter, Histogram, MetricsRegistry
@@ -21,6 +23,8 @@ __all__ = [
     "Counter", "Histogram", "MetricsRegistry",
     "EpochSnapshot", "SnapshotStore",
     "UpdateOp", "UpdateScheduler",
+    # re-export: the engine's maintenance= policy type lives in core
+    "MaintenancePolicy",
 ]
 
 # pre-redesign ``VARIANTS`` re-export served lazily with a DeprecationWarning

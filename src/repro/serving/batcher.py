@@ -144,6 +144,18 @@ class MicroBatcher:
     def pending(self) -> int:
         return len(self._pending)
 
+    def invalidate_stats(self) -> None:
+        """Drop the per-epoch planner stats cache.
+
+        In the engine's pump cycle this is belt-and-braces — maintenance
+        stages the rewritten index, so the following publish bumps the
+        epoch and re-keys the cache anyway. The explicit hook exists for
+        drivers that manage snapshots themselves and rewrite an index
+        without an epoch bump (consolidation changes the deleted fraction,
+        so ``mode="auto"`` must re-route on the very next bucket).
+        """
+        self._stats_cache = None
+
     # -- dispatch -----------------------------------------------------------
     def _plan_tier(self, snapshot: EpochSnapshot) -> str:
         """Planner consult for one bucket (stats cached per epoch)."""

@@ -12,7 +12,13 @@ One object ties the serving substrate together:
              drains them through the fused ``apply_update_batch`` op tape
              into the back buffer;
   * maintenance — tau-triggered backup rebuilds over unreachable points,
-             folded into the cycle instead of blocking a write call;
+             folded into the cycle instead of blocking a write call, plus
+             (with ``maintenance=MaintenancePolicy(...)``) health-driven
+             delete consolidation and unreachable-point repair
+             (:mod:`repro.core.maintenance`): the passes run on the back
+             buffer — never the published snapshot — and swap in as a new
+             epoch, which also re-keys the batcher's planner stats cache
+             so ``mode="auto"`` re-routes once the deleted fraction drops;
   * publication — ``SnapshotStore.publish()`` swaps the back buffer in,
              bumping the epoch.
 
@@ -36,10 +42,13 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.index import HNSWIndex, HNSWParams, empty_index
+from repro.core.maintenance import (MaintenancePolicy, index_health,
+                                    run_maintenance)
 from repro.core.reach import count_unreachable
 from repro.core.update import OP_DELETE, OP_INSERT, OP_NOP
 
@@ -57,6 +66,7 @@ class PumpStats:
     updates_applied: int
     backup_rebuilt: bool
     update_backlog: int
+    maintenance_ran: bool = False
 
 
 class ServingEngine:
@@ -68,6 +78,8 @@ class ServingEngine:
                  mesh=None, axis: str = "data",
                  track_unreachable: bool = False,
                  mode: str = "auto", planner=None,
+                 maintenance: MaintenancePolicy | None = None,
+                 maintain_every: int = 1,
                  metrics: MetricsRegistry | None = None):
         self.params = params
         self.k = k
@@ -76,6 +88,16 @@ class ServingEngine:
         self.mesh = mesh
         self.axis = axis
         self.track_unreachable = track_unreachable
+        self.maintenance = maintenance
+        # cadence is in PUMPS here (one pump drains up to max_ops_per_drain
+        # ops); the policy's check_every stays an op-count knob for the
+        # facade's mutation path and is NOT reused in the engine
+        if maintain_every < 1:
+            raise ValueError("maintain_every must be >= 1")
+        self.maintain_every = maintain_every
+        self._pumps_since_maintenance = 0
+        self._last_health = None     # health of the staged index, when fresh
+        self._dirty_since_consult = True   # writes since the last consult
         self.metrics = metrics or MetricsRegistry()
         self.dim = int(index.vectors.shape[-1])
 
@@ -88,11 +110,11 @@ class ServingEngine:
         if sharded and use_backup:
             raise ValueError("backup/dualSearch is not supported in sharded "
                              "mode yet — drop tau/backup_capacity")
-        if sharded and track_unreachable:
-            # count_unreachable expects a single [L, N, M0] adjacency, not a
-            # stacked [S, L, N, M0] one
-            raise ValueError("track_unreachable is not supported in sharded "
-                             "mode yet")
+        if sharded and maintenance is not None:
+            # consolidation/repair are single-graph passes; stacked-index
+            # maintenance is a follow-up
+            raise ValueError("maintenance policies are not supported in "
+                             "sharded mode yet — drop maintenance=")
         backup = None
         if use_backup:
             backup = empty_index(backup_params or params, backup_capacity,
@@ -189,6 +211,11 @@ class ServingEngine:
         if rebuilt:
             self.store.stage(backup=backup)
 
+        if applied:                    # main-index writes age the health
+            self._dirty_since_consult = True
+            self._last_health = None
+        maintained = self._maybe_maintain()
+
         out = self.store.publish()
 
         self.metrics.counter("pumps").inc()
@@ -197,13 +224,85 @@ class ServingEngine:
         self.metrics.histogram("pump_ms").observe(
             (time.perf_counter() - t0) * 1e3)
         if self.track_unreachable and out.epoch != snap.epoch:
-            u_ind, u_bfs = count_unreachable(out.index)
+            if self.mesh is not None:
+                u_ind, u_bfs = self._sharded_count_unreachable(out.index)
+            elif self._last_health is not None:
+                # the maintenance consult already swept this exact index —
+                # don't run the O(L*N*M0) reachability fix-point twice
+                u_ind = int(self._last_health.unreachable_def1)
+                u_bfs = int(self._last_health.unreachable_bfs)
+            else:
+                u_ind, u_bfs = count_unreachable(out.index)
             self.metrics.set_gauge("unreachable_indegree", int(u_ind))
             self.metrics.set_gauge("unreachable_bfs", int(u_bfs))
             self.metrics.histogram("unreachable_per_epoch").observe(int(u_ind))
         return PumpStats(epoch=out.epoch, queries_served=len(served),
                          updates_applied=applied, backup_rebuilt=rebuilt,
-                         update_backlog=self.scheduler.backlog)
+                         update_backlog=self.scheduler.backlog,
+                         maintenance_ran=maintained)
+
+    def _sharded_count_unreachable(self, stacked: HNSWIndex):
+        """Per-shard reachability sweeps summed into the global gauges.
+
+        ``count_unreachable`` expects one [L, N, M0] adjacency; a stacked
+        index vmaps it over the shard axis (each shard is an independent
+        sub-graph with its own entry point) and the counts sum — labels are
+        partitioned by ``label % nshards`` so no point is double-counted.
+        """
+        u_ind, u_bfs = jax.vmap(count_unreachable)(stacked)
+        return int(jnp.sum(u_ind)), int(jnp.sum(u_bfs))
+
+    def _maybe_maintain(self) -> bool:
+        """Policy-gated consolidation/repair on the back buffer.
+
+        Runs between the drain and the publish: the working (shadow) index
+        is consolidated/repaired off-snapshot and staged, so readers only
+        ever see the result as a whole new epoch. The batcher's per-epoch
+        planner stats are invalidated explicitly as well — the very next
+        bucket must re-consult ``choose_tier`` against the maintained
+        state (e.g. route back to the graph tier once the deleted
+        fraction drops).
+        """
+        if self.maintenance is None:
+            self._last_health = None
+            return False
+        self._pumps_since_maintenance += 1
+        if self._pumps_since_maintenance < self.maintain_every:
+            return False
+        if not self._dirty_since_consult:
+            # no writes since the last consult: the health of an unchanged
+            # index is unchanged — idle pumps must not pay the O(L*N*M0)
+            # reachability sweep (``_last_health`` stays valid too)
+            return False
+        self._pumps_since_maintenance = 0
+        t0 = time.perf_counter()
+        h = index_health(self.store.working_index())
+        new_index, report = run_maintenance(
+            self.params, self.store.working_index(), self.maintenance,
+            health=h)
+        if not (report["consolidated"] or report["repair_passes"]):
+            # nothing ran: h still describes the index about to publish —
+            # keep it so the unreachable gauges can reuse the sweep
+            self._last_health = h
+            self._dirty_since_consult = False
+            return False
+        # maintenance itself rewrote the index: the next consult must
+        # re-sweep, and the cached health no longer matches
+        self._last_health = None
+        self._dirty_since_consult = True
+        self.store.stage(index=new_index)
+        self.batcher.invalidate_stats()
+        if report["consolidated"]:
+            self.metrics.counter("maintenance_consolidations").inc()
+            self.metrics.counter("maintenance_slots_reclaimed").inc(
+                report["reclaimed"])
+        self.metrics.counter("maintenance_repair_passes").inc(
+            report["repair_passes"])
+        self.metrics.set_gauge("maintenance_unreachable_def1",
+                               report["unreachable_def1"])
+        self.metrics.histogram("maintenance_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        return True
 
     def drain_all(self, max_pumps: int = 1_000) -> list[PumpStats]:
         """Pump until both queues are empty (or ``max_pumps``)."""
