@@ -1,0 +1,206 @@
+"""Ingest bench: wave-parallel batch executor vs the sequential op tape.
+
+The tentpole claim, measured: drained ``{op, label, vector}`` tapes applied
+through the conflict-free wave executor (``core.batch_update``) must beat
+the one-op-per-``lax.scan``-step sequential tape by >= 5x at batch >= 256
+while staying recall-comparable (wave recall >= sequential - 0.01). The
+sweep covers batch sizes x both executors for fresh-insert tapes plus a
+delete+replace churn tape, and records the wave schedule
+(``compile_tape``'s wave widths) per batch.
+
+Results land in ``experiments/results/BENCH_ingest.json`` (per-batch
+throughput/recall rows + the summary gates) so CI and future PRs can diff
+the perf trajectory.
+
+  PYTHONPATH=src python benchmarks/ingest_bench.py
+  PYTHONPATH=src python benchmarks/ingest_bench.py --dry-run   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import HNSWParams, batch_knn, build, compile_tape
+from repro.core.update import (OP_DELETE, OP_INSERT, OP_REPLACE,
+                               apply_update_batch_jit)
+from repro.data import brute_force_knn, clustered_vectors
+
+from common import SCALE, save_result
+
+K = 10
+N_QUERIES = 64
+GATE_BATCH = 256          # the acceptance gate applies from this batch size
+GATE_SPEEDUP = 5.0
+GATE_RECALL_SLACK = 0.01
+
+
+def recall(lab, gt):
+    return float(np.mean([len(set(lab[i]) & set(gt[i])) / K
+                          for i in range(gt.shape[0])]))
+
+
+def timed_apply(params, index, ops, labels, X, execution, reps):
+    """Warm (compile + run once), then best-of-reps wall seconds."""
+    out = apply_update_batch_jit(params, index, ops, labels, X,
+                                 execution=execution)
+    out.vectors.block_until_ready()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = apply_update_batch_jit(params, index, ops, labels, X,
+                                     execution=execution)
+        out.vectors.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def insert_tape(n_base, batch, dim, seed):
+    newX = clustered_vectors(batch, dim, seed=seed)
+    ops = np.full((batch,), OP_INSERT, np.int32)
+    labels = np.arange(10_000, 10_000 + batch, dtype=np.int32)
+    return ops, labels, newX
+
+
+def churn_tape(n_base, batch, dim, seed):
+    """delete batch//2 existing labels + replace with the rest as new points."""
+    half = batch // 2
+    n_new = batch - half
+    rng = np.random.default_rng(seed)
+    dels = rng.choice(n_base, half, replace=False).astype(np.int32)
+    newX = clustered_vectors(n_new, dim, seed=seed + 1)
+    ops = np.concatenate([np.full(half, OP_DELETE, np.int32),
+                          np.full(n_new, OP_REPLACE, np.int32)])
+    labels = np.concatenate(
+        [dels, np.arange(20_000, 20_000 + n_new, dtype=np.int32)])
+    X = np.concatenate([np.zeros((half, dim), np.float32), newX])
+    return ops, labels, X, dels, newX
+
+
+def live_recall_after(params, index, X_base, base_labels, newX, new_labels,
+                      dropped, Q):
+    keep = ~np.isin(base_labels, dropped)
+    rows = np.concatenate([X_base[keep], newX])
+    labels = np.concatenate([base_labels[keep], new_labels])
+    gt = labels[brute_force_knn(rows, Q, K)]
+    lab, _, _ = batch_knn(params, index, jnp.asarray(Q), K, 64)
+    return recall(np.asarray(lab), gt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny corpus, one batch size, no results "
+                         "file, gates reported but not asserted")
+    ap.add_argument("--n", type=int, default=0, help="base corpus (0 = auto)")
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--batches", type=int, nargs="*", default=None)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        n = args.n or 192
+        batches = args.batches or [32]
+        reps = 1
+    else:
+        n = args.n or int(2048 * SCALE)
+        batches = args.batches or [64, 256, 512]
+        reps = args.reps
+    dim = args.dim
+    capacity = 1 << (n + max(batches) - 1).bit_length()
+
+    p = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                   ef_search=64)
+    X = clustered_vectors(n, dim, seed=3)
+    base_labels = np.arange(n)
+    print(f"building base {n} x {dim} (capacity {capacity}) ...", flush=True)
+    base = build(p, jnp.asarray(X), capacity=capacity)
+    base.vectors.block_until_ready()
+    Q = clustered_vectors(N_QUERIES, dim, seed=11)
+
+    rows = []
+    print(f"{'tape':>8} {'batch':>6} {'waves':>6} {'seq ms':>9} "
+          f"{'wave ms':>9} {'speedup':>8} {'rec seq':>8} {'rec wave':>8}")
+    for batch in batches:
+        for tape_kind in ("insert", "churn"):
+            if tape_kind == "insert":
+                ops, labels, newX = insert_tape(n, batch, dim, 900 + batch)
+                Xt, dropped = newX, np.empty(0, np.int64)
+                new_labels = labels
+            else:
+                ops, labels, Xt, dropped, newX = churn_tape(
+                    n, batch, dim, 900 + batch)
+                new_labels = labels[len(dropped):]
+            plan = compile_tape(ops, labels, Xt, built=n)
+            cell = {"tape": tape_kind, "batch": batch,
+                    "waves": plan.num_waves,
+                    "wave_widths": [len(w[0]) for w in plan.waves]}
+            out = {}
+            for ex in ("sequential", "wave"):
+                idx, dt = timed_apply(p, base, jnp.asarray(ops),
+                                      jnp.asarray(labels), jnp.asarray(Xt),
+                                      ex, reps)
+                cell[f"{ex}_ms"] = dt * 1e3
+                cell[f"{ex}_ops_per_s"] = batch / dt
+                cell[f"recall_{ex}"] = live_recall_after(
+                    p, idx, X, base_labels, newX, new_labels, dropped, Q)
+                out[ex] = dt
+            cell["speedup"] = out["sequential"] / out["wave"]
+            rows.append(cell)
+            print(f"{tape_kind:>8} {batch:>6} {cell['waves']:>6} "
+                  f"{cell['sequential_ms']:>9.1f} {cell['wave_ms']:>9.1f} "
+                  f"{cell['speedup']:>8.2f} {cell['recall_sequential']:>8.4f} "
+                  f"{cell['recall_wave']:>8.4f}", flush=True)
+
+    # --- acceptance gates --------------------------------------------------
+    # the tentpole gate is INGEST (fresh-insert) throughput; churn tapes pay
+    # the batched repair sweep and gate on not regressing vs sequential
+    gated = [c for c in rows
+             if c["batch"] >= GATE_BATCH and c["tape"] == "insert"]
+    churned = [c for c in rows
+               if c["batch"] >= GATE_BATCH and c["tape"] == "churn"]
+    speed_ok = all(c["speedup"] >= GATE_SPEEDUP for c in gated)
+    churn_ok = all(c["speedup"] >= 1.0 for c in churned)
+    recall_ok = all(
+        c["recall_wave"] >= c["recall_sequential"] - GATE_RECALL_SLACK
+        for c in rows)
+    ok = (speed_ok or not gated) and (churn_ok or not churned) and recall_ok
+    if gated:
+        worst = min(c["speedup"] for c in gated)
+        print(f"\ngate: ingest >= {GATE_SPEEDUP}x at batch >= {GATE_BATCH}: "
+              f"worst {worst:.2f}x -> {'PASS' if speed_ok else 'FAIL'}")
+    if churned:
+        worst_c = min(c["speedup"] for c in churned)
+        print(f"gate: churn >= 1x at batch >= {GATE_BATCH}: worst "
+              f"{worst_c:.2f}x -> {'PASS' if churn_ok else 'FAIL'}")
+    print(f"gate: wave recall >= sequential - {GATE_RECALL_SLACK}: "
+          f"{'PASS' if recall_ok else 'FAIL'}")
+
+    if args.dry_run:
+        print("dry run: skipping results file")
+        return
+    save_result("BENCH_ingest", {
+        "k": K, "dim": dim, "n_base": n, "capacity": capacity,
+        "batches": batches, "reps": reps, "n_queries": N_QUERIES,
+        "backend_note": "CPU container: re-run on TPU for hardware numbers",
+        "rows": rows,
+        "summary": {
+            "gate_batch": GATE_BATCH,
+            "gate_speedup": GATE_SPEEDUP,
+            "gate_recall_slack": GATE_RECALL_SLACK,
+            "min_ingest_speedup_at_gate": min((c["speedup"] for c in gated),
+                                              default=None),
+            "min_churn_speedup_at_gate": min((c["speedup"] for c in churned),
+                                             default=None),
+            "max_speedup": max(c["speedup"] for c in rows),
+            "gates_pass": bool(ok),
+        },
+    })
+    print("saved -> experiments/results/BENCH_ingest.json")
+    assert ok, "ingest acceptance gates failed"
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,10 @@ from repro.core.metrics import (Metric, get_metric, list_metrics,
 from repro.core.planner import (DEFAULT_PLANNER, MODES, IndexStats,
                                 PlanDecision, PlannerConfig, choose_tier,
                                 index_stats)
-from repro.core.strategies import (UpdateStrategy, get_strategy,
-                                   list_strategies, register_strategy)
+from repro.core.strategies import (UpdateStrategy, get_executor,
+                                   get_strategy, list_executors,
+                                   list_strategies, register_executor,
+                                   register_strategy)
 
 from .facade import VectorIndex, create
 
@@ -28,6 +30,7 @@ __all__ = [
     "VectorIndex", "create",
     "Metric", "get_metric", "list_metrics", "register_metric",
     "UpdateStrategy", "get_strategy", "list_strategies", "register_strategy",
+    "get_executor", "list_executors", "register_executor",
     "DEFAULT_PLANNER", "MODES", "IndexStats", "PlanDecision",
     "PlannerConfig", "choose_tier", "index_stats",
     "IndexHealth", "MaintenancePolicy",

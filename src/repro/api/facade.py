@@ -30,9 +30,13 @@ Design notes:
     past capacity triggers a pow2 repack through
     :func:`~repro.core.index.resize_index` — so the per-capacity jit
     specialisations stay at one program per doubling, not per size;
-  * mutations ride the fused op tape (``apply_update_batch``) in pow2
-    buckets, the same compiled programs the serving engine drains, so an
-    interactive facade session and a production engine share caches;
+  * mutations ride the fused op tape (``apply_update_batch``) through the
+    wave-parallel batch executor (``core.batch_update``): one call per
+    mutation batch, deletes vectorized, inserts/replaces in pow2-bucketed
+    conflict-free waves — the same compiled programs the serving engine
+    drains, so an interactive facade session and a production engine share
+    caches; bulk ``add_items`` on an empty index builds in ``O(log n)``
+    waves via ``build_batch``;
   * ``cosine`` unit-normalises vectors AND queries at ingest (the metric
     registry's ``normalize_ingest`` flag); the core only ever sees the
     cheap ``1 - <q, x>`` kernel;
@@ -174,7 +178,23 @@ class VectorIndex:
 
     def _apply_tape(self, ops: np.ndarray, labels: np.ndarray,
                     X: np.ndarray) -> None:
-        """Drain a mixed mutation tape through the fused scan, pow2-chunked."""
+        """Apply a mixed mutation tape through the wave-parallel executor.
+
+        The whole tape goes down in ONE call — the executor dedupes
+        duplicate labels (last-write-wins), applies deletes in one
+        vectorized pass, and splits inserts/replaces into pow2-bucketed
+        conflict-free waves itself, so the old host-side ``_MAX_TAPE``
+        chunk loop is gone from the hot path. Strategies with a custom
+        ``repair_fn`` can't ride the batched repair sweep; they keep the
+        sequential scan in pow2 chunks (the parity path).
+        """
+        if len(ops) == 0:
+            return
+        if get_strategy(self.strategy).repair_fn is None:
+            self._index = apply_update_batch_jit(
+                self.params, self._index, ops, labels, X, self.strategy,
+                execution="wave")
+            return
         for lo in range(0, len(ops), _MAX_TAPE):
             o = ops[lo:lo + _MAX_TAPE]
             l = labels[lo:lo + _MAX_TAPE]
@@ -187,7 +207,7 @@ class VectorIndex:
                                                 np.float32)])
             self._index = apply_update_batch_jit(
                 self.params, self._index, jnp.asarray(o), jnp.asarray(l),
-                jnp.asarray(x), self.strategy)
+                jnp.asarray(x), self.strategy, execution="sequential")
 
     def _maybe_maintain(self, n_ops: int) -> None:
         """Policy-gated online maintenance behind the mutation calls.

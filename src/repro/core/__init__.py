@@ -10,16 +10,19 @@ from .index import (HNSWIndex, HNSWParams, empty_index, resize_index,
                     sample_level)
 from .metrics import (Metric, dist_pairwise, dist_point, get_metric,
                       list_metrics, register_metric)
-from .strategies import (UpdateStrategy, get_strategy, list_strategies,
+from .strategies import (UpdateStrategy, get_executor, get_strategy,
+                         list_executors, list_strategies, register_executor,
                          register_strategy)
 from .hnsw import build, insert, insert_jit
+from .batch_update import (WavePlan, apply_plan, apply_update_batch_wave,
+                           build_batch, compile_tape)
 from .search import batch_knn, greedy_layer, knn_search, search_layer
 from .update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
                      apply_update_batch, apply_update_batch_jit,
-                     delete_and_update_batch, first_deleted_slot,
-                     first_free_slot, mark_delete, mark_delete_jit,
-                     num_deleted, replaced_update, replaced_update_jit,
-                     slot_of_label)
+                     apply_update_batch_sequential, delete_and_update_batch,
+                     first_deleted_slot, first_free_slot, mark_delete,
+                     mark_delete_jit, num_deleted, replaced_update,
+                     replaced_update_jit, slot_of_label)
 from .planner import (DEFAULT_PLANNER, MODES, IndexStats, PlanDecision,
                       PlannerConfig, choose_tier, exact_scan, index_stats,
                       plan_and_search)
@@ -37,10 +40,13 @@ __all__ = [
     # metric registry
     "Metric", "dist_pairwise", "dist_point", "get_metric", "list_metrics",
     "register_metric",
-    # update-strategy registry
+    # update-strategy + tape-executor registries
     "UpdateStrategy", "get_strategy", "list_strategies", "register_strategy",
-    # construction
-    "build", "insert", "insert_jit",
+    "get_executor", "list_executors", "register_executor",
+    # construction (sequential insert loop + wave-parallel batch build)
+    "build", "insert", "insert_jit", "build_batch",
+    # wave-parallel batch updates (tape compiler + executors)
+    "WavePlan", "apply_plan", "apply_update_batch_wave", "compile_tape",
     # search
     "batch_knn", "greedy_layer", "knn_search", "search_layer",
     # query execution planner (graph vs exact Pallas scan tier)
@@ -50,6 +56,7 @@ __all__ = [
     # updates (op tape + replaced_update family)
     "OP_DELETE", "OP_INSERT", "OP_NOP", "OP_REPLACE",
     "apply_update_batch", "apply_update_batch_jit",
+    "apply_update_batch_sequential",
     "delete_and_update_batch", "first_deleted_slot", "first_free_slot",
     "mark_delete", "mark_delete_jit", "num_deleted",
     "replaced_update", "replaced_update_jit", "slot_of_label",

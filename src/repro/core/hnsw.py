@@ -169,10 +169,36 @@ def insert_jit(params: HNSWParams, index: HNSWIndex, x: jax.Array,
     return insert(params, index, x, pid, label)
 
 
+#: ``build(execution="auto")`` routes to the wave builder at/above this size
+#: — where O(log n) waves beat the fori_loop even including compile time;
+#: below it the single-program sequential builder compiles far cheaper
+WAVE_BUILD_MIN_N = 1024
+
+
 def build(params: HNSWParams, vectors: jax.Array,
           labels: jax.Array | None = None, seed: int = 0,
-          capacity: int | None = None) -> HNSWIndex:
-    """Incrementally build an index over ``vectors[n, d]`` (jit, fori_loop)."""
+          capacity: int | None = None,
+          execution: str = "auto") -> HNSWIndex:
+    """Build an index over ``vectors[n, d]``; point ``i`` lands in slot ``i``.
+
+    ``execution="wave"`` constructs in ``O(log n)`` geometrically-growing
+    conflict-free waves (:func:`~repro.core.batch_update.build_batch` — a
+    bounded set of compiled wave programs instead of ``n`` sequential
+    insert steps); ``execution="sequential"`` keeps the original jitted
+    ``fori_loop`` insert-at-a-time builder (the parity baseline).
+    ``"auto"`` (default) picks waves from :data:`WAVE_BUILD_MIN_N` points —
+    below that the fori_loop's single cheap compile wins wall-clock.
+    """
+    if execution not in ("auto", "wave", "sequential"):
+        raise ValueError(f"unknown build execution {execution!r}; expected "
+                         f"'auto', 'wave', or 'sequential'")
+    if execution == "auto":
+        execution = "wave" if vectors.shape[0] >= WAVE_BUILD_MIN_N \
+            else "sequential"
+    if execution == "wave":
+        from .batch_update import build_batch
+        return build_batch(params, vectors, labels, seed=seed,
+                           capacity=capacity)
     n, d = vectors.shape
     capacity = capacity or n
     labels = jnp.arange(n, dtype=jnp.int32) if labels is None else labels

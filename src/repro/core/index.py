@@ -125,3 +125,16 @@ def sample_level(key: jax.Array, params: HNSWParams) -> jax.Array:
     e = jax.random.exponential(key, dtype=jnp.float32)  # = -ln(U)
     lvl = jnp.floor(e * mL).astype(jnp.int32)
     return jnp.clip(lvl, 0, params.num_layers - 1)
+
+
+def sample_levels(key: jax.Array, params: HNSWParams, n: int) -> jax.Array:
+    """Batched level sampling: ``n`` levels from one folded PRNG key.
+
+    Lane ``i`` folds ``i`` into ``key``, so a whole wave of inserts draws
+    its levels in one vectorized call (used by the wave-parallel batch
+    executor, :mod:`~repro.core.batch_update`) while staying a pure
+    function of ``(key, i)`` — deterministic under jit and across hosts.
+    """
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n, dtype=jnp.uint32))
+    return jax.vmap(lambda k: sample_level(k, params))(keys)

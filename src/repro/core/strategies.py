@@ -92,6 +92,52 @@ BUILTIN_STRATEGIES = ("hnsw_ru", "mn_ru_alpha", "mn_ru_beta", "mn_ru_gamma",
                       "mn_thn_ru")
 
 
+# ---------------------------------------------------------------------------
+# tape-execution registry: HOW a drained op tape is applied
+# ---------------------------------------------------------------------------
+#
+# Orthogonal to the update-strategy registry above (WHICH neighbourhoods a
+# replacement repairs): an executor is the engine that applies a whole
+# {op, label, vector} tape. Built-ins register themselves on import —
+# "sequential" (core.update: one lax.scan step per op, the parity baseline)
+# and "wave" (core.batch_update: conflict-free vectorized waves).
+
+_EXECUTORS: dict[str, Callable] = {}
+
+#: modules whose import registers the built-in executors (resolved lazily so
+#: this registry module keeps zero jax-level dependencies)
+_BUILTIN_EXECUTOR_MODULES = ("repro.core.update", "repro.core.batch_update")
+
+
+def register_executor(name: str, fn: Callable,
+                      *, overwrite: bool = False) -> Callable:
+    """Register a tape executor ``fn(params, index, ops, labels, X,
+    variant) -> index`` under ``name``; returns ``fn``."""
+    if name in _EXECUTORS and not overwrite:
+        raise ValueError(f"tape executor {name!r} is already registered; "
+                         f"pass overwrite=True to replace it")
+    _EXECUTORS[name] = fn
+    return fn
+
+
+def get_executor(name: str) -> Callable:
+    """Look up a tape executor (THE uniform unknown-executor error)."""
+    if name not in _EXECUTORS:
+        import importlib
+        for mod in _BUILTIN_EXECUTOR_MODULES:
+            importlib.import_module(mod)
+    try:
+        return _EXECUTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown tape execution {name!r}; registered executors: "
+            f"{list_executors()}") from None
+
+
+def list_executors() -> tuple[str, ...]:
+    return tuple(sorted(_EXECUTORS))
+
+
 def variants_deprecation_shim(module_name: str):
     """One module-level ``__getattr__`` serving the retired ``VARIANTS``
     name with a DeprecationWarning (shared by every module that used to

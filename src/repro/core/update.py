@@ -31,7 +31,8 @@ from .metrics import dist_point
 from .prune import alpha_rng_select, select_neighbors
 from .search import greedy_layer, search_layer
 from .strategies import (BUILTIN_STRATEGIES, UpdateStrategy,  # noqa: F401
-                         get_strategy, list_strategies, register_strategy)
+                         get_executor, get_strategy, list_strategies,
+                         register_executor, register_strategy)
 
 # back-compat alias: the variant family now lives in core.strategies
 VARIANTS = BUILTIN_STRATEGIES
@@ -312,16 +313,15 @@ OP_NAMES = {OP_NOP: "nop", OP_DELETE: "delete", OP_REPLACE: "replace",
             OP_INSERT: "insert"}
 
 
-def apply_update_batch(params: HNSWParams, index: HNSWIndex, ops: jax.Array,
-                       labels: jax.Array, X: jax.Array,
-                       variant: str = "mn_ru_gamma") -> HNSWIndex:
-    """Apply a padded tape of mixed {delete, replace, insert} ops in order.
+def apply_update_batch_sequential(params: HNSWParams, index: HNSWIndex,
+                                  ops: jax.Array, labels: jax.Array,
+                                  X: jax.Array,
+                                  variant: str = "mn_ru_gamma") -> HNSWIndex:
+    """The sequential tape executor: one ``lax.scan`` step per op, in order.
 
-    ``ops[T]`` holds OP_* codes, ``labels[T]`` the per-op label, ``X[T, d]``
-    the per-op vector (ignored for delete/nop). One ``lax.scan`` over the
-    tape means an arbitrary mixed batch compiles ONCE per tape length — the
-    serving layer buckets tape lengths (powers of two) to bound
-    recompilation. Semantically identical to issuing the ops one at a time:
+    Semantically identical to issuing the ops one at a time — this is the
+    parity baseline the wave executor is tested against, and the traceable
+    fallback (it composes under jit/scan, unlike the host-driven waves):
 
       OP_DELETE  == mark_delete
       OP_REPLACE == replaced_update (same deleted-slot reuse + fresh
@@ -359,11 +359,71 @@ def apply_update_batch(params: HNSWParams, index: HNSWIndex, ops: jax.Array,
     return index
 
 
-@partial(jax.jit, static_argnames=("params", "variant"))
+register_executor("sequential", apply_update_batch_sequential)
+
+_apply_update_batch_sequential_jit = jax.jit(
+    apply_update_batch_sequential, static_argnames=("params", "variant"))
+
+
+def _wave_effective(ops, index: HNSWIndex, variant: str,
+                    execution: str) -> bool:
+    """Resolve the execution for one tape: the wave executor needs a
+    concrete (host) tape AND index, and only implements the declarative
+    repair configs — custom ``repair_fn`` strategies and traced
+    tapes/indexes (callers jitting around the whole apply) route back to
+    the sequential scan, everything else rides the waves."""
+    if execution != "wave":
+        return False
+    if get_strategy(variant).repair_fn is not None:
+        return False
+    return not (isinstance(ops, jax.core.Tracer)
+                or isinstance(index.count, jax.core.Tracer))
+
+
+def apply_update_batch(params: HNSWParams, index: HNSWIndex, ops: jax.Array,
+                       labels: jax.Array, X: jax.Array,
+                       variant: str = "mn_ru_gamma",
+                       execution: str = "wave") -> HNSWIndex:
+    """Apply a padded tape of mixed {delete, replace, insert} ops.
+
+    ``ops[T]`` holds OP_* codes, ``labels[T]`` the per-op label, ``X[T, d]``
+    the per-op vector (ignored for delete/nop). ``execution`` picks the
+    tape executor from the registry (:mod:`~repro.core.strategies`):
+
+      * ``"wave"`` (default) — the conflict-free vectorized wave executor
+        (:mod:`~repro.core.batch_update`): deletes apply in one vectorized
+        pass, inserts/replaces in ``O(waves)`` compiled programs instead of
+        ``O(T)`` scan steps. Per-label outcomes match the sequential tape;
+        graph edge sets are recall-equivalent, not bit-identical.
+      * ``"sequential"`` — one ``lax.scan`` step per op, bit-for-bit the
+        one-at-a-time semantics (kept for parity testing; also the
+        automatic fallback for traced tapes and custom ``repair_fn``
+        strategies, which the batched repair sweep cannot honour).
+    """
+    get_strategy(variant)   # uniform unknown-strategy error, fail-fast
+    exec_fn = get_executor(execution)
+    if execution == "wave" and not _wave_effective(ops, index, variant,
+                                                   execution):
+        exec_fn = get_executor("sequential")
+    return exec_fn(params, index, ops, labels, X, variant)
+
+
 def apply_update_batch_jit(params: HNSWParams, index: HNSWIndex,
                            ops: jax.Array, labels: jax.Array, X: jax.Array,
-                           variant: str = "mn_ru_gamma") -> HNSWIndex:
-    return apply_update_batch(params, index, ops, labels, X, variant)
+                           variant: str = "mn_ru_gamma",
+                           execution: str = "wave") -> HNSWIndex:
+    """Jit-backed :func:`apply_update_batch`: the wave path jits each phase
+    internally; the sequential path runs the cached jitted scan."""
+    get_strategy(variant)
+    if execution == "wave":
+        if _wave_effective(ops, index, variant, execution):
+            return get_executor("wave")(params, index, ops, labels, X,
+                                        variant)
+        execution = "sequential"  # traced args / custom repair_fn fallback
+    if execution == "sequential":
+        return _apply_update_batch_sequential_jit(params, index, ops, labels,
+                                                  X, variant)
+    return get_executor(execution)(params, index, ops, labels, X, variant)
 
 
 @partial(jax.jit, static_argnames=("params", "variant"))

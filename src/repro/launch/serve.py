@@ -42,6 +42,12 @@ def main():
                     help="query execution tier: auto = planner-routed per "
                          "bucket, graph = HNSW beam search, exact = Pallas "
                          "scan tier (see docs/QUERY_PLANNER.md)")
+    ap.add_argument("--execution", default="wave",
+                    choices=("wave", "sequential"),
+                    help="update-tape executor: wave = conflict-free "
+                         "vectorized waves (docs/BATCH_UPDATES.md), "
+                         "sequential = one op per scan step (parity "
+                         "baseline)")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--updates-per-round", type=int, default=100)
     ap.add_argument("--backup", action="store_true",
@@ -93,7 +99,7 @@ def main():
         tau=args.tau if args.backup else 0,
         backup_capacity=max(args.n // 8, 64) if args.backup else 0,
         track_unreachable=True, mode=args.mode, maintenance=policy,
-        maintain_every=args.maint_every)
+        maintain_every=args.maint_every, execution=args.execution)
 
     next_label = args.n
     live = dict(enumerate(range(args.n)))  # label -> row id in X_all
@@ -147,6 +153,7 @@ def main():
               f" | cycle {dt * 1e3:7.1f} ms"
               f" | qps {len(Q) / max(dt, 1e-9):8.1f}"
               f" | lag {lag}"
+              f" | waves {int(u.gauge('waves_per_pump'))}"
               f" | recall@{args.k} {recall:.4f}"
               f" | batch p99 {q_lat['p99']:.1f} ms"
               f" | unreachable indeg="

@@ -9,7 +9,9 @@ The blessed way to construct an engine is
 plus its metric space and update strategy; the classes here remain public
 for drivers that manage the pytree themselves.
 """
+from repro.core.batch_update import WavePlan, compile_tape
 from repro.core.maintenance import MaintenancePolicy
+from repro.core.strategies import get_executor, list_executors
 
 from .batcher import MicroBatcher, QueryTicket, bucket_size, pow2_floor
 from .engine import PumpStats, ServingEngine
@@ -25,6 +27,8 @@ __all__ = [
     "UpdateOp", "UpdateScheduler",
     # re-export: the engine's maintenance= policy type lives in core
     "MaintenancePolicy",
+    # re-export: the drain path's wave-tape compiler + executor registry
+    "WavePlan", "compile_tape", "get_executor", "list_executors",
 ]
 
 # pre-redesign ``VARIANTS`` re-export served lazily with a DeprecationWarning

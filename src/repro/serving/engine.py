@@ -9,8 +9,12 @@ One object ties the serving substrate together:
              index is enabled — or the exact Pallas scan tier when the
              snapshot is small or churn-heavy (``mode=`` pins a tier);
   * writes — :class:`UpdateScheduler` queues delete/replace/insert ops and
-             drains them through the fused ``apply_update_batch`` op tape
-             into the back buffer;
+             drains the whole backlog into the back buffer in one call:
+             ``execution="wave"`` (default) compiles the tape into
+             conflict-free vectorized waves (``core.batch_update`` —
+             ``waves_per_pump`` in :class:`PumpStats`/metrics counts the
+             dispatched wave programs), ``execution="sequential"`` keeps
+             the one-op-per-scan-step tape;
   * maintenance — tau-triggered backup rebuilds over unreachable points,
              folded into the cycle instead of blocking a write call, plus
              (with ``maintenance=MaintenancePolicy(...)``) health-driven
@@ -67,6 +71,8 @@ class PumpStats:
     backup_rebuilt: bool
     update_backlog: int
     maintenance_ran: bool = False
+    waves_per_pump: int = 0    # wave programs the drain dispatched (0 when
+                               # nothing drained or execution="sequential")
 
 
 class ServingEngine:
@@ -80,11 +86,13 @@ class ServingEngine:
                  mode: str = "auto", planner=None,
                  maintenance: MaintenancePolicy | None = None,
                  maintain_every: int = 1,
+                 execution: str = "wave",
                  metrics: MetricsRegistry | None = None):
         self.params = params
         self.k = k
         self.ef = ef
         self.variant = variant
+        self.execution = execution
         self.mesh = mesh
         self.axis = axis
         self.track_unreachable = track_unreachable
@@ -131,7 +139,7 @@ class ServingEngine:
         self.scheduler = UpdateScheduler(
             params, self.dim, variant, max_ops_per_drain, tau=tau,
             backup_params=backup_params, backup_capacity=backup_capacity,
-            metrics=self.metrics,
+            metrics=self.metrics, execution=execution,
             apply_fn=self._sharded_apply if sharded else None)
 
     # -- sharded routing ----------------------------------------------------
@@ -203,6 +211,7 @@ class ServingEngine:
 
         new_index, applied = self.scheduler.drain(self.store.working_index(),
                                                   max_updates)
+        waves = self.scheduler.last_drain_waves if applied else 0
         if applied:
             self.store.stage(index=new_index)
 
@@ -220,6 +229,7 @@ class ServingEngine:
 
         self.metrics.counter("pumps").inc()
         self.metrics.set_gauge("epoch", out.epoch)
+        self.metrics.set_gauge("waves_per_pump", waves)
         self.metrics.set_gauge("update_lag_ops", self.scheduler.backlog)
         self.metrics.histogram("pump_ms").observe(
             (time.perf_counter() - t0) * 1e3)
@@ -239,7 +249,7 @@ class ServingEngine:
         return PumpStats(epoch=out.epoch, queries_served=len(served),
                          updates_applied=applied, backup_rebuilt=rebuilt,
                          update_backlog=self.scheduler.backlog,
-                         maintenance_ran=maintained)
+                         maintenance_ran=maintained, waves_per_pump=waves)
 
     def _sharded_count_unreachable(self, stacked: HNSWIndex):
         """Per-shard reachability sweeps summed into the global gauges.

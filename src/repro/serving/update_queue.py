@@ -2,10 +2,20 @@
 
 Writers never touch the index directly — they enqueue :class:`UpdateOp`\\ s
 (``delete`` / ``replace`` / ``insert``) and the engine's maintenance cycle
-drains the queue through ``core.update.apply_update_batch``: one
-``lax.scan`` over a padded {op, label, vector} tape, bucketed to power-of-two
-lengths so arbitrary mixed batches hit at most ``log2(max_ops_per_drain)+1``
-compiled programs.
+drains the whole backlog in one call. ``execution="wave"`` (default) hands
+the drained tape to the wave-parallel batch executor
+(:mod:`repro.core.batch_update`): duplicate labels collapse last-write-wins,
+deletes apply in one vectorized pass, and the insert/replace set runs as
+``O(waves)`` conflict-free vectorized waves. ``execution="sequential"``
+keeps the original one-op-per-``lax.scan``-step tape for parity testing.
+Tapes are bucketed to power-of-two lengths, and the compiled apply fn for
+each ``(bucket, variant, execution, dtype)`` is memoized in a BOUNDED LRU
+(``apply_cache_max``). On the sequential path each entry owns a private
+``jax.jit`` wrapper, so evicting it actually frees the per-bucket compiled
+scan; the wave path shares ONE entry per (variant, dtype) — its compiled
+programs live in the executor's own pow2-width-bounded cache
+(``core.batch_update``). The live entry count is exported as the
+``apply_cache_size`` gauge.
 
 The scheduler also owns the paper's tau counter (Fig. 4 upper layer): every
 ``tau`` replace/insert ops it rebuilds the unreachable-point backup index via
@@ -17,18 +27,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backup import rebuild_backup
+from repro.core.batch_update import apply_plan, compile_tape
 from repro.core.index import HNSWIndex, HNSWParams
 from repro.core.metrics import get_metric, normalize_rows
-from repro.core.strategies import get_strategy
+from repro.core.strategies import get_executor, get_strategy
 from repro.core.update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
-                               apply_update_batch_jit)
+                               apply_update_batch_sequential)
 
 from .batcher import bucket_size, pow2_floor
 from .metrics import MetricsRegistry
@@ -70,22 +82,30 @@ class UpdateScheduler:
                  tau: int = 0, backup_params: HNSWParams | None = None,
                  backup_capacity: int = 0,
                  metrics: MetricsRegistry | None = None,
-                 apply_fn: Callable | None = None):
+                 apply_fn: Callable | None = None,
+                 execution: str = "wave", apply_cache_max: int = 16):
         if max_ops_per_drain < 1:
             raise ValueError("max_ops_per_drain must be >= 1")
+        if apply_cache_max < 1:
+            raise ValueError("apply_cache_max must be >= 1")
         # fail at construction, not minutes later at the first drain — one
         # registry lookup is THE validation (uniform error message)
         get_strategy(variant)
+        get_executor(execution)
         self._normalize = get_metric(params.space).normalize_ingest
         self.params = params
         self.dim = dim
         self.variant = variant
+        self.execution = execution
         self.max_ops_per_drain = pow2_floor(max_ops_per_drain)
         self.tau = tau
         self.backup_params = backup_params or params
         self.backup_capacity = backup_capacity
         self.metrics = metrics or MetricsRegistry()
         self._apply_fn = apply_fn or self._default_apply
+        self.apply_cache_max = apply_cache_max
+        self._apply_cache: OrderedDict[tuple, Callable] = OrderedDict()
+        self.last_drain_waves = 0   # wave programs in the latest drain
         self._queue: deque[UpdateOp] = deque()
         self._ru_ops = 0          # replace/insert ops applied (tau counter)
         self._rebuilds = 0
@@ -122,9 +142,54 @@ class UpdateScheduler:
         return self._rebuilds
 
     # -- drain --------------------------------------------------------------
+    def _make_apply_fn(self) -> Callable:
+        """Build the apply fn one cache entry owns.
+
+        Wave path: compile the tape (dedup + wave split) and run the plan —
+        the per-width wave programs live in the executor's own bounded
+        pow2 cache. Sequential path: a FRESH ``jax.jit`` wrapper per cache
+        entry, so evicting the entry really frees the per-bucket compiled
+        scan instead of leaking it into a process-global cache."""
+        wave = (self.execution == "wave"
+                and get_strategy(self.variant).repair_fn is None)
+        if wave:
+            def fn(index, ops, labels, X):
+                plan = compile_tape(ops, labels, X, built=int(index.count))
+                self.last_drain_waves = plan.num_waves + (
+                    1 if plan.num_deletes else 0)
+                if plan.deduped:
+                    self.metrics.counter("updates_deduped").inc(plan.deduped)
+                return apply_plan(self.params, index, plan, self.variant)
+            return fn
+        jfn = jax.jit(apply_update_batch_sequential,
+                      static_argnames=("params", "variant"))
+
+        def fn(index, ops, labels, X):
+            self.last_drain_waves = 0
+            return jfn(self.params, index, jnp.asarray(ops),
+                       jnp.asarray(labels), jnp.asarray(X), self.variant)
+        return fn
+
     def _default_apply(self, index: HNSWIndex, ops, labels, X) -> HNSWIndex:
-        return apply_update_batch_jit(self.params, index, ops, labels, X,
-                                      self.variant)
+        """Memoized per-``(bucket, variant, execution, dtype)`` dispatch.
+
+        The wave path's closure is tape-length-agnostic (the executor
+        buckets wave widths itself), so it shares one entry across buckets
+        instead of crowding out sequential entries that own compiled
+        scans."""
+        wave = (self.execution == "wave"
+                and get_strategy(self.variant).repair_fn is None)
+        key = (None if wave else len(ops), self.variant, self.execution,
+               str(np.asarray(X).dtype))
+        fn = self._apply_cache.get(key)
+        if fn is None:
+            while len(self._apply_cache) >= self.apply_cache_max:
+                self._apply_cache.popitem(last=False)   # evict the coldest
+            fn = self._apply_cache[key] = self._make_apply_fn()
+        else:
+            self._apply_cache.move_to_end(key)
+        self.metrics.set_gauge("apply_cache_size", len(self._apply_cache))
+        return fn(index, ops, labels, X)
 
     def drain(self, index: HNSWIndex,
               max_ops: int | None = None) -> tuple[HNSWIndex, int]:
@@ -152,13 +217,14 @@ class UpdateScheduler:
                 (now - op.enqueued_t) * 1e3)
 
         t0 = time.perf_counter()
-        index = self._apply_fn(index, jnp.asarray(ops), jnp.asarray(labels),
-                               jnp.asarray(X))
+        index = self._apply_fn(index, ops, labels, X)
         self.metrics.histogram("drain_latency_ms").observe(
             (time.perf_counter() - t0) * 1e3)
         self._ru_ops += sum(1 for op in batch if op.kind != "delete")
         self.metrics.counter("updates_applied").inc(take)
         self.metrics.counter("update_drains").inc()
+        self.metrics.histogram("waves_per_drain").observe(
+            self.last_drain_waves)
         return index, take
 
     # -- maintenance --------------------------------------------------------

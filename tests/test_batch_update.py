@@ -1,0 +1,401 @@
+"""Wave-parallel batch executor: recall parity with the sequential tape,
+deterministic wave scheduling, label conservation, dedup, and the serving
+integration (memoized apply cache, waves_per_pump)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HNSWParams, batch_knn, build, build_batch,
+                        count_unreachable, num_deleted, slot_of_label)
+from repro.core.batch_update import (MAX_WAVE, MIN_WAVE, WavePlan,
+                                     apply_update_batch_wave, compile_tape)
+from repro.core.metrics import normalize_rows
+from repro.core.strategies import get_executor, list_executors
+from repro.core.update import (OP_DELETE, OP_INSERT, OP_NOP, OP_REPLACE,
+                               apply_update_batch,
+                               apply_update_batch_sequential)
+from repro.data import clustered_vectors, exact_knn
+
+SPACES = ("l2", "ip", "cosine")
+K = 10
+
+
+def _recall(lab, gt):
+    k = gt.shape[1]
+    return np.mean([len(set(lab[i]) & set(gt[i])) / k
+                    for i in range(gt.shape[0])])
+
+
+def _tree_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _params(space):
+    return HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                      ef_search=64, space=space)
+
+
+def _base(space, n=400, dim=16, capacity=None):
+    X = clustered_vectors(n, dim, seed=13)
+    if space == "cosine":
+        X = normalize_rows(X)
+    p = _params(space)
+    idx = build(p, jnp.asarray(X), capacity=capacity or 2 * n)
+    return p, idx, X
+
+
+# ---------------------------------------------------------------------------
+# tape compiler
+# ---------------------------------------------------------------------------
+
+def test_compile_tape_phases_and_wave_growth():
+    """Deletes split off; write waves grow geometrically with the graph."""
+    T = 300
+    ops = np.full((T,), OP_INSERT, np.int32)
+    ops[::10] = OP_DELETE
+    labels = np.arange(T, dtype=np.int32)
+    X = np.zeros((T, 4), np.float32)
+    plan = compile_tape(ops, labels, X, built=0)
+    assert isinstance(plan, WavePlan)
+    assert plan.num_deletes == 30
+    assert plan.num_writes == 270
+    widths = [len(w[0]) for w in plan.waves]
+    assert widths[0] == 1                      # empty-graph bootstrap wave
+    assert all(w <= MAX_WAVE for w in widths)
+    # each wave is bounded by the graph built before it (conflict-free rule)
+    g = 0
+    for w in widths:
+        assert w <= max(MIN_WAVE, max(g, 1))
+        g += w
+    # a large built graph collapses the same writes into one wave
+    plan2 = compile_tape(ops, labels, X, built=4096)
+    assert plan2.num_waves == 1
+
+    # the schedule is a pure function of the tape
+    plan3 = compile_tape(ops, labels, X, built=0)
+    assert [len(w[0]) for w in plan3.waves] == widths
+
+
+def test_compile_tape_dedup_last_write_wins():
+    """Duplicate labels collapse to the final op (plus a guarding delete)."""
+    dim = 4
+    ops = np.asarray([OP_INSERT, OP_INSERT, OP_DELETE, OP_REPLACE,
+                      OP_DELETE], np.int32)
+    labels = np.asarray([7, 7, 9, 9, 11], np.int32)
+    X = np.arange(5 * dim, dtype=np.float32).reshape(5, dim)
+    plan = compile_tape(ops, labels, X, built=64)
+    assert plan.deduped == 2
+    assert plan.num_writes == 2                # one write per surviving label
+    # label 7: duplicate inserts -> delete guard + last vector only
+    # label 9: delete->replace   -> delete first, then the replace
+    # label 11: plain delete
+    assert sorted(plan.del_labels.tolist()) == [7, 9, 11]
+    w_ops, w_labels, w_X = plan.waves[0]
+    assert w_labels.tolist() == [7, 9]
+    np.testing.assert_array_equal(w_X[0], X[1])    # last write won
+    np.testing.assert_array_equal(w_X[1], X[3])
+
+
+# ---------------------------------------------------------------------------
+# executor registry
+# ---------------------------------------------------------------------------
+
+def test_executor_registry():
+    assert {"sequential", "wave"} <= set(list_executors())
+    assert get_executor("wave") is apply_update_batch_wave
+    with pytest.raises(ValueError, match="registered executors"):
+        get_executor("psychic")
+
+
+def test_custom_repair_fn_falls_back_to_sequential(small_params, small_index):
+    """The wave executor can't honour a custom repair kernel — the dispatch
+    must route those tapes through the sequential scan (trace-time calls)."""
+    from repro.core.strategies import UpdateStrategy, register_strategy
+    calls = []
+
+    def no_repair(params, nbrs, vectors, deleted, pid, layer, strategy):
+        calls.append(layer)
+        return nbrs
+
+    name = "test_wave_fallback_ru"
+    from repro.api import list_strategies
+    if name not in list_strategies():
+        register_strategy(UpdateStrategy(name, repair_fn=no_repair))
+    idx = apply_update_batch(
+        small_params, small_index,
+        np.asarray([OP_DELETE, OP_REPLACE], np.int32),
+        np.asarray([3, 9001], np.int32),
+        np.zeros((2, small_index.dim), np.float32), variant=name)
+    assert calls                       # the override ran => sequential path
+    assert int(slot_of_label(idx, jnp.int32(9001))) >= 0
+
+
+# ---------------------------------------------------------------------------
+# recall parity + determinism + label conservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("space", SPACES)
+def test_wave_recall_parity_with_sequential(space):
+    """Mixed churn tape: the wave executor must stay recall-comparable to
+    the sequential scan (the bit-level graphs legitimately differ)."""
+    p, idx, X = _base(space)
+    n, dim = X.shape
+    rng = np.random.default_rng(5)
+    n_del, n_new = 40, 80
+    dels = rng.choice(n, n_del, replace=False).astype(np.int32)
+    newX = clustered_vectors(n_new, dim, seed=29)
+    if space == "cosine":
+        newX = normalize_rows(newX)
+    new_labels = np.arange(1000, 1000 + n_new, dtype=np.int32)
+
+    ops = np.concatenate([np.full(n_del, OP_DELETE, np.int32),
+                          np.full(n_new // 2, OP_REPLACE, np.int32),
+                          np.full(n_new - n_new // 2, OP_INSERT, np.int32)])
+    labels = np.concatenate([dels, new_labels])
+    Xt = np.concatenate([np.zeros((n_del, dim), np.float32), newX])
+
+    idx_w = apply_update_batch_wave(p, idx, ops, labels, Xt)
+    idx_s = apply_update_batch_sequential(
+        p, idx, jnp.asarray(ops), jnp.asarray(labels), jnp.asarray(Xt))
+
+    live_labels = np.concatenate([np.setdiff1d(np.arange(n), dels),
+                                  new_labels])
+    live_rows = np.concatenate([X[np.setdiff1d(np.arange(n), dels)], newX])
+    Q = clustered_vectors(32, dim, seed=31)
+    if space == "cosine":
+        Q = normalize_rows(Q)
+    gt = live_labels[exact_knn(live_rows, Q, K, space)]
+
+    recs = {}
+    for name, ix in (("wave", idx_w), ("seq", idx_s)):
+        lab, _, _ = batch_knn(p, ix, jnp.asarray(Q), K)
+        recs[name] = _recall(np.asarray(lab), gt)
+        # no deleted label ever resurfaces
+        assert not np.isin(np.asarray(lab), dels).any()
+    assert recs["wave"] >= recs["seq"] - 0.05, recs
+
+
+def test_wave_deterministic_for_fixed_seed(small_params, small_index):
+    """Same index + same tape => bit-identical result, twice over."""
+    dim = small_index.dim
+    ops = np.concatenate([np.full(10, OP_DELETE, np.int32),
+                          np.full(20, OP_REPLACE, np.int32)])
+    labels = np.concatenate([np.arange(10, dtype=np.int32),
+                             np.arange(700, 720, dtype=np.int32)])
+    Xt = np.concatenate([np.zeros((10, dim), np.float32),
+                         clustered_vectors(20, dim, seed=41)])
+    a = apply_update_batch_wave(small_params, small_index, ops, labels, Xt)
+    b = apply_update_batch_wave(small_params, small_index, ops, labels, Xt)
+    _tree_equal(a, b)
+
+    # and the wave build is deterministic end to end
+    X = clustered_vectors(200, 8, seed=43)
+    p = HNSWParams(M=4, M0=8, num_layers=2, ef_construction=32)
+    _tree_equal(build_batch(p, jnp.asarray(X), seed=7),
+                build_batch(p, jnp.asarray(X), seed=7))
+
+
+def test_delete_then_insert_same_label_conserves_labels(small_params,
+                                                        small_index):
+    """A tape mixing delete -> insert on one label ends with exactly one
+    live slot for it (and the wave dedup never drops the reinsert)."""
+    dim = small_index.dim
+    x_new = clustered_vectors(1, dim, seed=47)[0]
+    ops = np.asarray([OP_DELETE, OP_INSERT], np.int32)
+    labels = np.asarray([17, 17], np.int32)
+    Xt = np.stack([np.zeros(dim, np.float32), x_new])
+    idx = apply_update_batch_wave(small_params, small_index, ops, labels, Xt)
+    live = (np.asarray(idx.labels) == 17) & (np.asarray(idx.levels) >= 0) \
+        & ~np.asarray(idx.deleted)
+    assert live.sum() == 1
+    lab, _, _ = batch_knn(small_params, idx, jnp.asarray(x_new)[None], 1)
+    assert int(lab[0, 0]) == 17
+
+
+def test_duplicate_inserts_one_live_slot(small_params):
+    """Two same-label inserts in one tape must not burn two live slots."""
+    p = small_params
+    X = clustered_vectors(64, 8, seed=51)
+    idx = build(p, jnp.asarray(X[:32]), capacity=64)
+    ops = np.full(4, OP_INSERT, np.int32)
+    labels = np.asarray([900, 901, 900, 900], np.int32)
+    idx2 = apply_update_batch_wave(p, idx, ops, labels, X[32:36])
+    lbls = np.asarray(idx2.labels)
+    live = (np.asarray(idx2.levels) >= 0) & ~np.asarray(idx2.deleted)
+    assert ((lbls == 900) & live).sum() == 1
+    assert ((lbls == 901) & live).sum() == 1
+    # the LAST vector won the label
+    slot = int(np.nonzero((lbls == 900) & live)[0][0])
+    np.testing.assert_allclose(np.asarray(idx2.vectors)[slot], X[35],
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["hnsw_ru", "mn_ru_gamma", "mn_thn_ru"])
+def test_wave_replace_repairs_and_reuses_slots(small_params, small_index,
+                                               variant):
+    """Replace waves reuse mark-deleted slots (level inheritance) and leave
+    the graph navigable for every strategy's batched repair sweep."""
+    dim = small_index.dim
+    n_ch = 24
+    dels = np.arange(0, 3 * n_ch, 3).astype(np.int32)
+    newX = clustered_vectors(n_ch, dim, seed=53)
+    news = np.arange(2000, 2000 + n_ch, dtype=np.int32)
+    ops = np.concatenate([np.full(n_ch, OP_DELETE, np.int32),
+                          np.full(n_ch, OP_REPLACE, np.int32)])
+    labels = np.concatenate([dels, news])
+    Xt = np.concatenate([np.zeros((n_ch, dim), np.float32), newX])
+    idx = apply_update_batch_wave(small_params, small_index, ops, labels, Xt,
+                                  variant)
+    assert int(num_deleted(idx)) == 0          # every deleted slot reused
+    assert int(idx.count) == int(small_index.count)
+    lab, _, _ = batch_knn(small_params, idx, jnp.asarray(newX), 1)
+    assert np.mean(np.asarray(lab)[:, 0] == news) >= 0.9
+    u_ind, _ = count_unreachable(idx)
+    assert int(u_ind) <= 5
+
+
+def test_wave_insert_full_index_drops_op(small_params, small_data):
+    """No free slot -> the op is dropped, exactly like the sequential tape."""
+    n = 32
+    idx = build(small_params, jnp.asarray(small_data[:n]), capacity=n)
+    newX = clustered_vectors(2, small_data.shape[1], seed=59)
+    idx2 = apply_update_batch_wave(
+        small_params, idx, np.full(2, OP_INSERT, np.int32),
+        np.asarray([800, 801], np.int32), newX)
+    assert int(idx2.count) == n
+    assert int(slot_of_label(idx2, jnp.int32(800))) == -1
+
+
+def test_build_batch_matches_build_structurally():
+    """Wave build: slot i == point i, structural invariants, self-recall."""
+    p = HNSWParams(M=8, M0=16, num_layers=3, ef_construction=48,
+                   ef_search=48)
+    X = clustered_vectors(300, 12, seed=61)
+    idx = build_batch(p, jnp.asarray(X))
+    np.testing.assert_array_equal(np.asarray(idx.labels)[:300],
+                                  np.arange(300))
+    nbrs = np.asarray(idx.neighbors)
+    levels = np.asarray(idx.levels)
+    for layer in range(p.num_layers):
+        deg = (nbrs[layer] >= 0).sum(1)
+        assert deg.max() <= p.m_for_layer(layer)
+        assert deg[levels < layer].max(initial=0) == 0
+        tgts = nbrs[layer][nbrs[layer] >= 0]
+        assert (levels[tgts] >= layer).all()
+    lab, _, _ = batch_knn(p, idx, jnp.asarray(X[:50]), 1)
+    assert np.mean(np.asarray(lab)[:, 0] == np.arange(50)) >= 0.95
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: mixed tapes conserve labels across all spaces
+# ---------------------------------------------------------------------------
+
+def test_wave_mixed_tape_label_conservation_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    dim = 8
+    pool = clustered_vectors(128, dim, seed=67)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.sampled_from(SPACES),
+           st.lists(st.tuples(st.sampled_from([OP_DELETE, OP_REPLACE,
+                                               OP_INSERT]),
+                              st.integers(0, 1_000_000)),
+                    min_size=1, max_size=20))
+    def run(space, tape):
+        p = HNSWParams(M=4, M0=8, num_layers=2, ef_construction=32,
+                       ef_search=32, space=space)
+        X0 = pool[:24]
+        if space == "cosine":
+            X0 = normalize_rows(X0)
+        idx = build(p, jnp.asarray(X0), capacity=64)
+
+        # facade-discipline tape: writes mint fresh labels, deletes target
+        # live ones (label clashes within a tape are covered by the
+        # dedicated dedup tests above)
+        live, next_label = set(range(24)), 24
+        kinds, labels = [], []
+        for kind, r in tape:
+            if kind == OP_DELETE:
+                if not live:
+                    continue
+                lbl = sorted(live)[r % len(live)]
+                live.discard(lbl)
+            else:
+                lbl = next_label
+                next_label += 1
+                live.add(lbl)
+            kinds.append(kind)
+            labels.append(lbl)
+        if not kinds:
+            return
+        ops = np.asarray(kinds, np.int32)
+        labels = np.asarray(labels, np.int32)
+        Xt = pool[40:40 + len(ops)].copy()
+        if space == "cosine":
+            Xt = normalize_rows(Xt)
+        idx_w = apply_update_batch_wave(p, idx, ops, labels, Xt)
+
+        lbls = np.asarray(idx_w.labels)
+        alive = (np.asarray(idx_w.levels) >= 0) & ~np.asarray(idx_w.deleted)
+        assert sorted(set(lbls[alive].tolist())) == sorted(live)
+        # one live slot per label — labels are conserved exactly
+        assert alive.sum() == len(live)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# serving integration: memoized apply cache + waves_per_pump
+# ---------------------------------------------------------------------------
+
+def test_scheduler_apply_cache_bounded(small_params, small_index):
+    from repro.serving import UpdateScheduler
+    sch = UpdateScheduler(small_params, small_index.dim,
+                          max_ops_per_drain=64, apply_cache_max=2)
+    idx = small_index
+    rng = np.random.default_rng(3)
+    for i, n_ops in enumerate((1, 3, 9, 17, 33)):   # buckets 1,4,16,32,64
+        for j in range(n_ops):
+            sch.insert(rng.standard_normal(small_index.dim), 3000 + 100 * i + j)
+        idx, applied = sch.drain(idx)
+        assert applied == n_ops
+        assert len(sch._apply_cache) <= 2           # bounded LRU
+    assert sch.metrics.gauge("apply_cache_size") <= 2
+    assert sch.last_drain_waves >= 1
+
+
+def test_engine_reports_waves_per_pump(small_params, small_index):
+    from repro.serving import ServingEngine
+    engine = ServingEngine(small_params, small_index, k=5)
+    stats = engine.pump()
+    assert stats.waves_per_pump == 0               # nothing drained
+    rng = np.random.default_rng(11)
+    for i in range(10):
+        engine.insert(rng.standard_normal(small_index.dim), 5000 + i)
+    engine.delete(2)
+    stats = engine.pump()
+    assert stats.updates_applied == 11
+    assert stats.waves_per_pump >= 2               # delete phase + >=1 wave
+    assert engine.metrics.gauge("waves_per_pump") == stats.waves_per_pump
+
+
+def test_scheduler_drain_dedups_same_label(small_params, small_data):
+    from repro.serving import UpdateScheduler
+    base = build(small_params, jnp.asarray(small_data[:32]), capacity=64)
+    sch = UpdateScheduler(small_params, base.dim)
+    x1 = clustered_vectors(1, base.dim, seed=71)[0]
+    x2 = clustered_vectors(1, base.dim, seed=72)[0]
+    sch.insert(x1, 4000)
+    sch.insert(x2, 4000)                            # same label, last wins
+    idx, applied = sch.drain(base)
+    assert applied == 2
+    assert sch.metrics.counter("updates_deduped").value == 1
+    lbls = np.asarray(idx.labels)
+    live = (np.asarray(idx.levels) >= 0) & ~np.asarray(idx.deleted)
+    assert ((lbls == 4000) & live).sum() == 1
+    slot = int(np.nonzero((lbls == 4000) & live)[0][0])
+    np.testing.assert_allclose(np.asarray(idx.vectors)[slot], x2, rtol=1e-5)

@@ -132,8 +132,10 @@ def _tree_equal(a, b):
 
 
 def test_apply_update_batch_matches_sequential(small_params, small_index):
-    """Mixed op tape == issuing mark_delete / replaced_update / insert 1-by-1
-    in the same order (OP_NOP padding included)."""
+    """Mixed op tape (execution="sequential") == issuing mark_delete /
+    replaced_update / insert 1-by-1 in the same order (OP_NOP padding
+    included). The default wave executor is recall-equivalent, not
+    bit-identical — its parity property lives in tests/test_batch_update.py."""
     d = small_index.dim
     newX = clustered_vectors(4, d, seed=77)
     ops = [(OP_DELETE, 11, np.zeros(d, np.float32)),
@@ -149,7 +151,7 @@ def test_apply_update_batch_matches_sequential(small_params, small_index):
         small_params, small_index,
         jnp.asarray([o[0] for o in ops], jnp.int32),
         jnp.asarray([o[1] for o in ops], jnp.int32),
-        jnp.asarray(np.stack([o[2] for o in ops])))
+        jnp.asarray(np.stack([o[2] for o in ops])), execution="sequential")
 
     seq = small_index
     for op, lbl, x in ops:
@@ -169,7 +171,8 @@ def test_apply_update_batch_insert_op(small_params, small_data):
     tape = apply_update_batch_jit(
         small_params, index,
         jnp.asarray([OP_INSERT, OP_INSERT, OP_INSERT], jnp.int32),
-        jnp.asarray([500, 501, 502], jnp.int32), jnp.asarray(newX))
+        jnp.asarray([500, 501, 502], jnp.int32), jnp.asarray(newX),
+        execution="sequential")
 
     seq = index
     for i, lbl in enumerate((500, 501)):
